@@ -1,0 +1,56 @@
+"""Figure 3 analogue — scalability with context length and model size.
+
+(1) Context-length scaling: mean/max response length grows 8K→40K; the
+    paper observes the CoPRIS-over-sync speedup growing near-linearly
+    (1.27× @8K → 2.26× @40K) because the long tail sharpens with context.
+(2) Model-size scaling: larger models raise per-token cost (t_token) and
+    prefill/logp rates proportionally; speedup should persist across sizes
+    (paper: 1.57×–1.85× from 1.5B to 14B).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from benchmarks.sim import ClusterModel, LengthModel, run_steps
+from benchmarks.table1_end2end import PAPER_CLUSTER
+
+
+def _speedup(cluster, lengths, conc=1024, n=8, seed=5):
+    out = {}
+    for mode, c in [("sync", 0), ("copris", conc)]:
+        stats = run_steps(mode, n, concurrency=c, batch_size=64,
+                          group_size=8, cluster=cluster, lengths=lengths,
+                          seed=seed)
+        out[mode] = sum(s.step_time for s in stats[2:])
+    return out["sync"] / out["copris"]
+
+
+def main(rows_out):
+    # (1) context scaling — the TAIL scales with the context window while
+    # the typical response grows slower, so the tail/mean ratio (the thing
+    # partial rollout exploits) sharpens with ctx — the paper's Fig 3 trend
+    for ctx in (8_192, 16_384, 24_576, 40_960):
+        lengths = LengthModel(mean_len=1200 + ctx * 0.06,
+                              sigma=0.5 + 0.15 * ctx / 40_960, max_len=ctx,
+                              prompt_len=1024)
+        s = _speedup(PAPER_CLUSTER, lengths)
+        rows_out.append((f"fig3_ctx_{ctx//1024}k", ctx,
+                         f"speedup={s:.2f}x"))
+    # (2) model-size scaling — ALL service constants scale with params
+    # (per-token compute, weight-read/launch fixed cost, prefill, logp)
+    for size_b, scale in [(1.5, 1.0), (7.0, 3.0), (14.0, 5.5)]:
+        cluster = dataclasses.replace(
+            PAPER_CLUSTER,
+            t_fixed=PAPER_CLUSTER.t_fixed * scale,
+            t_token=PAPER_CLUSTER.t_token * scale,
+            t_quad=PAPER_CLUSTER.t_quad * scale,
+            prefill_tok_rate=PAPER_CLUSTER.prefill_tok_rate * scale,
+            logp_tok_rate=PAPER_CLUSTER.logp_tok_rate * scale,
+            train_time=PAPER_CLUSTER.train_time * scale)
+        lengths = LengthModel(mean_len=2800, sigma=0.5, max_len=15360,
+                              prompt_len=1024)
+        s = _speedup(cluster, lengths)
+        rows_out.append((f"fig3_size_{size_b}b", size_b,
+                         f"speedup={s:.2f}x"))

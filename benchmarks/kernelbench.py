@@ -1,0 +1,87 @@
+"""Per-kernel microbenchmarks.
+
+On this CPU container the Pallas kernels execute in interpret mode, so the
+wall-clock numbers validate the harness (and give the jnp-reference path's
+CPU cost); the TPU numbers come from the same harness on real hardware.
+Each row reports us/call of the jnp reference path (jit'd, production
+default on CPU) and the kernel's interpret-mode check status.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        fn(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        r = fn(*args)
+        (r[0] if isinstance(r, tuple) else r).block_until_ready()
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def main(rows_out):
+    key = jax.random.PRNGKey(0)
+
+    # flash attention ref path (chunked jnp)
+    from repro.models.attention import chunked_attention
+    q = jax.random.normal(key, (2, 512, 8, 64))
+    k = jax.random.normal(key, (2, 512, 2, 64))
+    v = jax.random.normal(key, (2, 512, 2, 64))
+    f = jax.jit(lambda q, k, v: chunked_attention(q, k, v, causal=True,
+                                                  q_offset=0))
+    rows_out.append(("kernel_flash_attn_ref_512", _time(f, q, k, v),
+                     "B2 S512 H8 KV2 hd64"))
+
+    # decode attention ref
+    from repro.models.attention import decode_attention
+    qd = jax.random.normal(key, (8, 1, 8, 64))
+    kc = jax.random.normal(key, (8, 4096, 2, 64))
+    vc = jax.random.normal(key, (8, 4096, 2, 64))
+    cl = jnp.full((8,), 4000)
+    f = jax.jit(lambda q, k, v, c: decode_attention(q, k, v, c))
+    rows_out.append(("kernel_decode_attn_ref_4k", _time(f, qd, kc, vc, cl),
+                     "B8 L4096 H8 KV2"))
+
+    # wkv6 ref
+    from repro.models.rwkv6 import wkv6_scan
+    r = jax.random.normal(key, (2, 256, 4, 64)) * 0.5
+    w = jax.nn.sigmoid(jax.random.normal(key, (2, 256, 4, 64))) * 0.5 + 0.45
+    u = jax.random.normal(key, (4, 64)) * 0.3
+    s0 = jnp.zeros((2, 4, 64, 64))
+    f = jax.jit(lambda r, w: wkv6_scan(r, r, r, w, u, s0)[0])
+    rows_out.append(("kernel_wkv6_ref_256", _time(f, r, w), "B2 T256 H4 hd64"))
+
+    # ssm ref
+    from repro.models.ssm import selective_scan
+    x = jax.random.normal(key, (2, 256, 256)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(key, (2, 256, 256))) * 0.1
+    A = jnp.log(jnp.abs(jax.random.normal(key, (256, 16))) + 0.5)
+    Bc = jax.random.normal(key, (2, 256, 16)) * 0.5
+    D = jnp.ones((256,))
+    s0 = jnp.zeros((2, 256, 16))
+    f = jax.jit(lambda x, dt: selective_scan(x, dt, A, Bc, Bc, D, s0)[0])
+    rows_out.append(("kernel_ssm_ref_256", _time(f, x, dt), "B2 T256 di256 N16"))
+
+    # fused logprob ref (vocab-blocked)
+    from repro.kernels.fused_logprob.ref import fused_logprob
+    h = jax.random.normal(key, (4, 128, 256)) * 0.3
+    wv = jax.random.normal(key, (256, 32000)) * 0.3
+    t = jax.random.randint(key, (4, 128), 0, 32000)
+    f = jax.jit(lambda h, w, t: fused_logprob(h, w, t, vocab_block=4096))
+    rows_out.append(("kernel_fused_logprob_ref_32k", _time(f, h, wv, t),
+                     "rows512 V32000 blocked"))
+
+    # interpret-mode kernel correctness spot checks (status in derived col)
+    from repro.kernels.flash_attn import ops as fa_ops
+    from repro.kernels.flash_attn import ref as fa_ref
+    o1 = fa_ops.flash_attention(q, k, v, block_q=128, block_k=128)
+    o2 = fa_ref.naive_attention(q, k, v)
+    err = float(jnp.max(jnp.abs(o1 - o2)))
+    rows_out.append(("kernel_flash_attn_pallas_check", err,
+                     f"interpret_allclose={'PASS' if err < 1e-4 else 'FAIL'}"))

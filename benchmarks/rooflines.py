@@ -1,0 +1,59 @@
+"""Roofline table from the dry-run artifacts (§Roofline of EXPERIMENTS.md).
+
+Reads results/dryrun_singlepod.json (and the multi-pod file if present) and
+prints, per (arch × shape): the three roofline terms, the dominant term,
+MODEL_FLOPS/HLO_FLOPs usefulness, and per-device memory.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+BASE = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def load(path):
+    if not os.path.exists(path):
+        return {}
+    latest = {}
+    for r in json.load(open(path)):
+        latest[(r["arch"], r["shape"])] = r
+    return latest
+
+
+def rows(path=None):
+    default = os.path.join(BASE, "dryrun_optimized.json")
+    if path is None and not os.path.exists(default):
+        default = os.path.join(BASE, "dryrun_singlepod.json")
+    recs = load(path or default)
+    out = []
+    for (arch, shape), r in sorted(recs.items()):
+        if r["status"] == "skip":
+            out.append((f"roofline_{arch}_{shape}", 0.0, "SKIP: " + r["reason"][:60]))
+            continue
+        if r["status"] != "ok":
+            out.append((f"roofline_{arch}_{shape}", -1.0, "ERROR"))
+            continue
+        t = r["roofline"]
+        mem_gib = r["memory"].get("total_nonalias", 0) / 2 ** 30
+        out.append((
+            f"roofline_{arch}_{shape}",
+            max(t.values()) * 1e6,          # dominant term in us
+            f"compute={t['compute_s']*1e3:.2f}ms "
+            f"memory={t['memory_s']*1e3:.2f}ms "
+            f"collective={t['collective_s']*1e3:.2f}ms "
+            f"dominant={r['dominant']} useful={r['useful_flops_ratio']:.2f} "
+            f"mem={mem_gib:.2f}GiB"))
+    return out
+
+
+def main(rows_out):
+    rows_out.extend(rows())
+    # multi-pod summary line
+    mp = load(os.path.join(BASE, "dryrun_multipod.json"))
+    if mp:
+        ok = sum(1 for r in mp.values() if r["status"] == "ok")
+        sk = sum(1 for r in mp.values() if r["status"] == "skip")
+        rows_out.append(("roofline_multipod_2x16x16", ok,
+                         f"compiled_ok={ok} documented_skips={sk} "
+                         f"errors={len(mp)-ok-sk}"))

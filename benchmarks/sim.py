@@ -1,0 +1,242 @@
+"""Event-driven rollout-cluster simulator.
+
+Validates the paper's *scheduling* claims (Table 1 speedups, Table 2
+concurrency ablation, Figure 3 scaling) without GPUs: the dispatch decisions
+come from the REAL ``ConcurrencyScheduler`` + ``TrajectoryBuffer`` (the same
+objects the live engine uses); only the service times are modelled:
+
+* an engine step advances every active request by one token and costs
+      t_step = t_fixed + t_token · active         (continuous batching)
+* inserting/resuming a request costs prefill at ``prefill_tok_rate`` per
+  token (CoPRIS pays re-prefill for resumed partials — the paper's
+  accounting);
+* KV memory pressure: when sum(active request lengths) exceeds
+  ``kv_capacity`` tokens the engine thrashes (vLLM preemption/recompute),
+  multiplying the step cost — the failure mode Concurrency-Controlled
+  Generation exists to avoid;
+* at training time, cross-stage IS requires recomputing log-probs for
+  carried-over tokens: t_logp = logp_tok_rate · carried_tokens (the
+  paper's "Cal logprob/s" column).
+
+Response lengths are lognormal (long-tailed, Fig 1 of the paper).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+from repro.common.config import RolloutConfig
+from repro.core.buffer import TrajectoryBuffer
+from repro.core.scheduler import ConcurrencyScheduler
+from repro.core.trajectory import Group
+
+
+@dataclass
+class ClusterModel:
+    """Service-time constants (arbitrary 'GPU-seconds'; ratios matter).
+
+    step cost = t_fixed + t_token·active + t_quad·active² — the fixed term
+    models per-step launch/weight-read cost (why LOW concurrency wastes
+    throughput), the quadratic term models post-saturation queueing (why
+    EXCESSIVE concurrency hurts, paper Table 2)."""
+    t_fixed: float = 4.0               # per engine step
+    t_token: float = 0.01              # per active request per step
+    t_quad: float = 2e-6               # saturation/queueing term
+    prefill_tok_rate: float = 0.0005   # per prefilled token
+    logp_tok_rate: float = 0.0004      # per recomputed logprob token
+    train_time: float = 150.0          # fixed update cost per RL step
+    kv_capacity: float = 12_000_000.0  # tokens before preemption thrashing
+    thrash_penalty: float = 1.5
+
+
+@dataclass
+class LengthModel:
+    mean_len: float = 2000.0
+    sigma: float = 0.9
+    max_len: int = 16384
+    prompt_len: int = 512
+
+    def sample(self, rng) -> int:
+        mu = np.log(self.mean_len) - self.sigma ** 2 / 2
+        return int(np.clip(rng.lognormal(mu, self.sigma), 4, self.max_len))
+
+
+@dataclass
+class StepStats:
+    rollout_time: float = 0.0
+    prefill_time: float = 0.0
+    logp_time: float = 0.0
+    train_time: float = 0.0
+    decode_steps: int = 0
+    generated_tokens: int = 0
+    carried_tokens: int = 0
+    evicted: int = 0
+    resumed: int = 0
+    thrash_steps: int = 0
+    slot_utilization: float = 0.0
+
+    @property
+    def step_time(self):
+        return (self.rollout_time + self.prefill_time + self.logp_time
+                + self.train_time)
+
+
+class RolloutSim:
+    """One RL step's rollout under a scheduling mode, using the real
+    scheduler. Trajectory token lists are materialised lazily (counts during
+    simulation; lists at buffer boundaries) so B=64 × G=8 × 2k-token runs
+    stay fast."""
+
+    def __init__(self, ro: RolloutConfig, cluster: ClusterModel,
+                 lengths: LengthModel, seed: int = 0):
+        self.ro = ro
+        self.cluster = cluster
+        self.lengths = lengths
+        self.rng = np.random.default_rng(seed)
+        self.buffer = TrajectoryBuffer()
+        self._gid = 0
+        self._targets = {}             # traj_id -> target response length
+        self.stage = 0
+
+    # -- helpers --------------------------------------------------------
+    def _new_group(self) -> Group:
+        g = Group(group_id=self._gid,
+                  prompt_tokens=np.zeros(self.lengths.prompt_len, np.int32),
+                  answer=0, size=self.ro.group_size)
+        self._gid += 1
+        return g
+
+    def _target(self, traj):
+        if traj.traj_id not in self._targets:
+            self._targets[traj.traj_id] = self.lengths.sample(self.rng)
+        return self._targets[traj.traj_id]
+
+    def _materialise(self, traj, n_new: int):
+        traj.response_tokens.extend([0] * n_new)
+        traj.behaviour_logps.extend([-1.0] * n_new)
+        traj.stage_ids.extend([self.stage] * n_new)
+
+    # -- one RL step ----------------------------------------------------
+    def run_step(self) -> StepStats:
+        ro, cl = self.ro, self.cluster
+        st = StepStats()
+        sched = ConcurrencyScheduler(ro, self.buffer, self._new_group)
+        pool = (ro.batch_size * ro.group_size if ro.mode == "sync"
+                else ro.concurrency)
+        slots: list = [None] * pool
+        grown = np.zeros(pool, np.int64)     # tokens generated this stage
+        base_len = np.zeros(pool, np.int64)  # resumed-prefix length
+        target = np.zeros(pool, np.int64)
+        active_mask = np.zeros(pool, bool)
+
+        def finish(i):
+            t = slots[i]
+            self._materialise(t, int(grown[i]))
+            t.done = True
+            t.finish_reason = "length"
+            sched.release(t)
+            slots[i] = None
+            active_mask[i] = False
+
+        def refill(i):
+            while not sched.done:
+                t = sched.next_request()
+                if t is None:
+                    slots[i] = None
+                    active_mask[i] = False
+                    return
+                slots[i] = t
+                carried = len(t.response_tokens)
+                if carried:
+                    st.resumed += 1
+                base_len[i] = carried
+                grown[i] = 0
+                target[i] = self._target(t)
+                active_mask[i] = True
+                st.prefill_time += cl.prefill_tok_rate * (
+                    self.lengths.prompt_len + carried)
+                if target[i] > carried:
+                    return
+                # already at target (resumed & done immediately)
+                finish(i)
+                sched.harvest()
+
+        def finish_check(i):
+            return base_len[i] + grown[i] >= target[i]
+
+        for i in range(pool):
+            refill(i)
+
+        total_slot_steps = 0
+        active_slot_steps = 0
+        while not sched.done:
+            idx = np.where(active_mask)[0]
+            if len(idx) == 0:
+                break
+            n_active = len(idx)
+            step_cost = (cl.t_fixed + cl.t_token * n_active
+                         + cl.t_quad * n_active * n_active)
+            kv_tokens = float(np.sum(self.lengths.prompt_len
+                                     + base_len[idx] + grown[idx]))
+            if kv_tokens > cl.kv_capacity:
+                step_cost *= cl.thrash_penalty
+                st.thrash_steps += 1
+            st.rollout_time += step_cost
+            st.decode_steps += 1
+            total_slot_steps += pool
+            active_slot_steps += n_active
+            grown[idx] += 1
+            st.generated_tokens += n_active
+            done_idx = [int(i) for i in idx if finish_check(i)]
+            for i in done_idx:
+                finish(i)
+            if done_idx:
+                sched.harvest()
+                for i in done_idx:
+                    if not sched.done:
+                        refill(i)
+
+        # early termination: evict in-flight partials back to the buffer
+        for i in range(pool):
+            t = slots[i]
+            if t is not None:
+                self._materialise(t, int(grown[i]))
+                sched.release(t)
+                slots[i] = None
+                st.evicted += 1
+        sched.harvest()
+
+        groups = sched.completed[: self.ro.batch_size]
+        for g in sched.completed[self.ro.batch_size:]:
+            self.buffer.add_group(g)
+
+        # training-side costs: recompute logp for all carried (cross-stage)
+        # tokens of the training batch
+        for g in groups:
+            for t in g.trajectories:
+                st.carried_tokens += sum(1 for s in t.stage_ids
+                                         if s != self.stage)
+        st.logp_time = cl.logp_tok_rate * st.carried_tokens
+        st.train_time = cl.train_time
+        st.slot_utilization = (active_slot_steps / total_slot_steps
+                               if total_slot_steps else 1.0)
+        self.stage += 1
+        self._completed_groups = groups
+        return st
+
+
+def run_steps(mode: str, n_steps: int, *, concurrency: int = 512,
+              batch_size: int = 64, group_size: int = 8,
+              cluster: Optional[ClusterModel] = None,
+              lengths: Optional[LengthModel] = None, seed: int = 0):
+    """Run n RL steps, return list of StepStats."""
+    cluster = cluster or ClusterModel()
+    lengths = lengths or LengthModel()
+    ro = RolloutConfig(batch_size=batch_size, group_size=group_size,
+                       concurrency=concurrency, mode=mode,
+                       max_response_len=lengths.max_len)
+    sim = RolloutSim(ro, cluster, lengths, seed=seed)
+    return [sim.run_step() for _ in range(n_steps)]

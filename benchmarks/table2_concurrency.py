@@ -1,0 +1,36 @@
+"""Table 2 analogue — concurrency ablation.
+
+Sweeps N' ∈ {512, 1024, 1536, 2048} plus naive partial rollout at initial
+concurrency 1536 (the paper's off-policy-matched baseline), reporting
+step / rollout / cal-logprob times and the off-policy token fraction. The
+expected shape (paper): moderate N' optimal; naive partial slower than
+CoPRIS at matched off-policy level; large N' inflates logp time and trips
+KV thrashing.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.sim import ClusterModel, LengthModel, run_steps
+from benchmarks.table1_end2end import PAPER_CLUSTER, PAPER_LENGTHS
+
+
+def main(rows_out):
+    cases = [("naive_partial", 1536), ("copris", 512), ("copris", 1024),
+             ("copris", 1536), ("copris", 2048)]
+    for mode, conc in cases:
+        stats = run_steps(mode, 10, concurrency=conc, batch_size=64,
+                          group_size=8, cluster=PAPER_CLUSTER,
+                          lengths=PAPER_LENGTHS, seed=3)[3:]   # steady state
+        step = np.mean([s.step_time for s in stats])
+        roll = np.mean([s.rollout_time + s.prefill_time for s in stats])
+        logp = np.mean([s.logp_time for s in stats])
+        carried = np.mean([s.carried_tokens for s in stats])
+        gen = np.mean([s.generated_tokens for s in stats])
+        thrash = sum(s.thrash_steps for s in stats)
+        name = ("table2_naive_1536" if mode == "naive_partial"
+                else f"table2_copris_{conc}")
+        rows_out.append((name, step,
+                         f"rollout={roll:.0f} cal_logprob={logp:.1f} "
+                         f"offpolicy_frac={carried/max(gen,1):.3f} "
+                         f"thrash_steps={thrash}"))

@@ -1,0 +1,33 @@
+"""Real wall-clock comparison of the three rollout modes on the tiny model:
+sync (veRL-style), naive partial rollout (Kimi-K1.5-style), CoPRIS.
+
+    PYTHONPATH=src python examples/copris_vs_sync.py
+"""
+import time
+
+import jax
+
+from repro.common.config import RolloutConfig
+from repro.configs import get_config
+from repro.core.rollout import RolloutEngine
+from repro.data.tasks import AdditionTask, EOS
+from repro.models import model as M
+
+cfg = get_config("tiny")
+params = M.init_params(jax.random.PRNGKey(0), cfg)
+
+print(f"{'mode':16s} {'pool':>4s} {'tok/s':>8s} {'util':>6s} {'resumed':>8s}")
+for mode, conc in [("sync", 0), ("naive_partial", 48), ("copris", 16)]:
+    task = AdditionTask(max_value=50, seed=0)
+    ro = RolloutConfig(batch_size=8, group_size=4, max_prompt_len=16,
+                       max_response_len=48, concurrency=conc, mode=mode)
+    eng = RolloutEngine(cfg, ro, task.sample_prompt, eos_id=EOS)
+    eng.collect(params, 0, jax.random.PRNGKey(9))          # warm jit
+    t0, gen, resumed, util = time.perf_counter(), 0, 0, []
+    for s in range(3):
+        _, st = eng.collect(params, s + 1, jax.random.PRNGKey(s))
+        gen += st["generated"]; resumed += st["resumed"]
+        util.append(st["utilization"])
+    dt = time.perf_counter() - t0
+    print(f"{mode:16s} {eng.pool:4d} {gen/dt:8.1f} "
+          f"{sum(util)/len(util):6.2f} {resumed:8d}")

@@ -1,0 +1,11 @@
+"""Batched serving with the concurrency-controlled slot engine across
+architecture families (dense / SSM / MoE / hybrid), smoke-sized on CPU.
+
+    PYTHONPATH=src python examples/serve_batch.py
+"""
+from repro.launch.serve import main
+
+for arch in ("llama3.2-1b", "rwkv6-1.6b", "deepseek-moe-16b", "hymba-1.5b"):
+    print(f"\n=== serving {arch} (smoke) ===")
+    main(["--arch", arch, "--smoke", "--requests", "6", "--concurrency", "3",
+          "--max-tokens", "16"])

@@ -1,0 +1,17 @@
+"""End-to-end driver: SFT warmup then CoPRIS GRPO training on the synthetic
+math task, with metrics + checkpoints. Thin wrapper over the real launcher —
+the same CLI scales from `tiny` to any assigned arch (use --smoke for CPU).
+
+    PYTHONPATH=src python examples/train_grpo_copris.py            # tiny, 60 steps
+    PYTHONPATH=src python examples/train_grpo_copris.py --steps 300
+"""
+import sys
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    argv = sys.argv[1:] or []
+    defaults = ["--arch", "tiny", "--mode", "copris", "--steps", "60",
+                "--sft-warmup", "150", "--out", "runs/quick_copris"]
+    # user args win over defaults
+    main(defaults + argv)

@@ -1,0 +1,334 @@
+"""Central configuration dataclasses for the repro framework.
+
+Everything in the system is driven by three config families:
+
+* :class:`ModelConfig` — architecture definition (the 10 assigned archs plus
+  the paper's own models are instances of this).
+* :class:`RolloutConfig` / :class:`TrainConfig` — CoPRIS RL-loop knobs
+  (concurrency pool size, batch size, GRPO hyper-params — mirrors Table 3 of
+  the paper).
+* :class:`MeshConfig` — distribution layout (single-pod 16x16 / multi-pod
+  2x16x16).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Architecture sub-configs
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    """Mixture-of-experts block configuration."""
+
+    num_experts: int
+    top_k: int
+    d_expert: int                      # hidden dim of EACH routed expert
+    num_shared_experts: int = 0        # DeepSeek-MoE style always-on experts
+    d_shared: int = 0                  # hidden dim of the shared expert(s)
+    router_aux_coef: float = 0.01      # load-balance auxiliary loss weight
+    router_jitter: float = 0.0
+    capacity_factor: float = 1.25      # used by the dropping dispatcher
+    dispatch: str = "sparse"           # "sparse" (capacity-bounded, prod) |
+                                       # "dense" (FLOP-exact reference)
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    """Mamba-style selective-state-space configuration (used by hymba)."""
+
+    state_dim: int = 16
+    conv_dim: int = 4
+    expand: int = 2                    # d_inner = expand * d_model
+    dt_rank: int = 0                   # 0 -> ceil(d_model / 16)
+
+
+@dataclass(frozen=True)
+class RWKVConfig:
+    """RWKV6 ("Finch") time-mix configuration."""
+
+    head_dim: int = 64
+    decay_lora: int = 64               # rank of the data-dependent decay LoRA
+    mix_lora: int = 32                 # rank of the token-shift mixing LoRA
+
+
+@dataclass(frozen=True)
+class CrossAttnConfig:
+    """VLM cross-attention configuration (vision frontend is a stub)."""
+
+    every: int = 5                     # one cross-attn layer per `every` layers
+    num_media_tokens: int = 1601       # image patch embeddings per request
+    d_media: int = 4096                # frontend embedding width (pre-projection)
+
+
+# ---------------------------------------------------------------------------
+# ModelConfig
+# ---------------------------------------------------------------------------
+
+# Block kinds understood by repro.models.transformer:
+#   "attn"   — dense GQA self-attention + gated MLP
+#   "local"  — sliding-window GQA self-attention + gated MLP
+#   "global" — full GQA self-attention + gated MLP (explicit, for gemma2)
+#   "moe"    — dense GQA self-attention + MoE FFN
+#   "rwkv"   — RWKV6 time-mix + channel-mix (attention-free)
+#   "hymba"  — parallel attention + SSM heads, shared gated MLP
+#   "xattn"  — cross-attention to media tokens + gated MLP (VLM)
+VALID_BLOCK_KINDS = ("attn", "local", "global", "moe", "rwkv", "hymba", "xattn")
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                        # dense | moe | ssm | hybrid | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                  # 0 -> d_model // num_heads
+
+    # Repeating block pattern; layer i is kind pattern[i % len(pattern)].
+    # `prefix_pattern` layers come first (e.g. deepseek-moe's leading dense
+    # layer) and are executed unrolled, before the scanned repeats.
+    block_pattern: Tuple[str, ...] = ("attn",)
+    prefix_pattern: Tuple[str, ...] = ()
+
+    # attention options
+    qk_norm: bool = False
+    rope_theta: float = 500_000.0
+    sliding_window: int = 4096         # used by "local" blocks
+    attn_softcap: float = 0.0          # gemma2 attention-logit softcap (0 = off)
+    logit_softcap: float = 0.0         # gemma2 final-logit softcap (0 = off)
+    attn_scale: float = 0.0            # 0 -> 1/sqrt(head_dim)
+
+    # embeddings / output
+    tie_embeddings: bool = True
+    embed_scale: bool = False          # gemma-style sqrt(d_model) embed scaling
+    embed_impl: str = "gather"         # "gather" (CPU) | "onehot" (TPU/SPMD —
+                                       # partitions as a matmul, avoiding the
+                                       # SPMD gather full-rematerialization)
+    cache_update: str = "dus"          # "dus" | "onehot" (select-based write,
+                                       # shardable when the cache length dim
+                                       # is split across devices)
+
+    # family sub-configs
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    rwkv: Optional[RWKVConfig] = None
+    cross_attn: Optional[CrossAttnConfig] = None
+
+    # norms / numerics
+    rms_eps: float = 1e-6
+    dtype: str = "bfloat16"            # activation / compute dtype
+    param_dtype: str = "float32"       # master param dtype
+
+    # citation for the assigned-architecture pool
+    source: str = ""
+
+    # ---------------------------------------------------------------
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+        for k in self.block_pattern + self.prefix_pattern:
+            if k not in VALID_BLOCK_KINDS:
+                raise ValueError(f"unknown block kind {k!r}")
+        body = self.num_layers - len(self.prefix_pattern)
+        if body < 0 or body % len(self.block_pattern) != 0:
+            raise ValueError(
+                f"{self.name}: num_layers={self.num_layers} incompatible with "
+                f"prefix={self.prefix_pattern} pattern={self.block_pattern}"
+            )
+
+    # ---------------------------------------------------------------
+    @property
+    def num_repeats(self) -> int:
+        """How many times the block pattern repeats (the scan length)."""
+        return (self.num_layers - len(self.prefix_pattern)) // len(self.block_pattern)
+
+    @property
+    def is_subquadratic(self) -> bool:
+        """True if every block is sub-quadratic in sequence length (SSM /
+        sliding window) — the eligibility rule for the long_500k shape."""
+        quad = {"attn", "moe", "xattn"}
+        kinds = set(self.block_pattern) | set(self.prefix_pattern)
+        # "global" blocks are full attention; gemma2 keeps them but we allow
+        # long_500k because *decode* against a KV cache is linear per token
+        # and the config may flag global layers as block-sparse for long ctx.
+        return not (kinds & quad)
+
+    @property
+    def uses_media(self) -> bool:
+        return self.cross_attn is not None
+
+    def reduced(self, *, num_layers: int = 2, max_d_model: int = 512,
+                max_experts: int = 4, max_vocab: int = 512) -> "ModelConfig":
+        """Smoke-test variant of the same family: <=2 layers, d_model<=512,
+        <=4 experts. Keeps the block kinds so the family code-path is
+        exercised for real."""
+        d_model = min(self.d_model, max_d_model)
+        # keep head structure: shrink heads so head_dim stays reasonable
+        num_heads = max(2, min(self.num_heads, d_model // 64))
+        ratio = max(1, self.num_heads // max(1, self.num_kv_heads))
+        num_kv_heads = max(1, num_heads // ratio)
+        num_heads = num_kv_heads * ratio
+        pattern = self.block_pattern
+        prefix = self.prefix_pattern[: 1 if self.prefix_pattern else 0]
+        body = num_layers - len(prefix)
+        if body % len(pattern) != 0:      # shrink pattern to fit 2 layers
+            pattern = pattern[: max(1, body)]
+            body = (body // len(pattern)) * len(pattern)
+        nl = len(prefix) + max(len(pattern), body)
+        moe = None
+        if self.moe is not None:
+            moe = dataclasses.replace(
+                self.moe,
+                num_experts=min(self.moe.num_experts, max_experts),
+                top_k=min(self.moe.top_k, 2),
+                d_expert=min(self.moe.d_expert, 256),
+                d_shared=min(self.moe.d_shared, 256),
+                num_shared_experts=min(self.moe.num_shared_experts, 1),
+                dispatch="dense",   # dropless: smoke tests check exact
+                                    # decode/full-forward consistency
+            )
+        rwkv = None
+        if self.rwkv is not None:
+            rwkv = dataclasses.replace(self.rwkv, head_dim=min(self.rwkv.head_dim, 32),
+                                       decay_lora=16, mix_lora=8)
+        xa = None
+        if self.cross_attn is not None:
+            xa = dataclasses.replace(self.cross_attn, num_media_tokens=16, d_media=64,
+                                     every=self.cross_attn.every)
+        return dataclasses.replace(
+            self,
+            name=self.name + "-smoke",
+            num_layers=nl,
+            d_model=d_model,
+            num_heads=num_heads,
+            num_kv_heads=num_kv_heads,
+            head_dim=0,
+            d_ff=min(self.d_ff, 4 * d_model),
+            vocab_size=min(self.vocab_size, max_vocab),
+            block_pattern=pattern,
+            prefix_pattern=prefix,
+            sliding_window=min(self.sliding_window, 64),
+            moe=moe,
+            rwkv=rwkv,
+            cross_attn=xa,
+            dtype="float32",
+        )
+
+    # -- parameter counting (for roofline MODEL_FLOPS) ----------------
+    def param_count(self, *, active_only: bool = False) -> int:
+        """Analytic parameter count. With ``active_only`` MoE experts are
+        counted as top_k (+shared) instead of all experts."""
+        hd = self.head_dim
+        d = self.d_model
+        attn = d * self.num_heads * hd + 2 * d * self.num_kv_heads * hd + self.num_heads * hd * d
+        mlp = 3 * d * self.d_ff
+        n = 0
+        kinds = list(self.prefix_pattern) + list(self.block_pattern) * self.num_repeats
+        for k in kinds:
+            if k in ("attn", "local", "global"):
+                n += attn + mlp
+            elif k == "xattn":
+                n += attn + mlp + (self.cross_attn.d_media * d if self.cross_attn else 0)
+            elif k == "moe":
+                m = self.moe
+                ne = (m.top_k if active_only else m.num_experts)
+                n += attn + 3 * d * m.d_expert * ne
+                n += 3 * d * m.d_shared * m.num_shared_experts
+                n += d * m.num_experts          # router
+            elif k == "rwkv":
+                # time-mix: r,k,v,g,o projections + decay/mix loras; channel-mix ~ 3*d*d_ff
+                n += 5 * d * d + 3 * d * self.d_ff
+            elif k == "hymba":
+                s = self.ssm or SSMConfig()
+                d_inner = s.expand * d
+                n += attn + mlp + 2 * d * d_inner + d_inner * d  # in/out ssm proj
+            n += 2 * d                                            # 2 RMSNorm scales
+        n += self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        return n
+
+
+# ---------------------------------------------------------------------------
+# RL / CoPRIS configs (paper Table 3 defaults)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class RolloutConfig:
+    batch_size: int = 64               # B: prompts per training step
+    group_size: int = 8                # G: samples per prompt (GRPO group)
+    max_prompt_len: int = 1024
+    max_response_len: int = 15360
+    temperature: float = 1.0
+    top_p: float = 1.0
+    top_k: int = -1
+    # --- CoPRIS specific ---
+    concurrency: int = 1024            # N': fixed in-flight rollout requests
+    mode: str = "copris"               # copris | naive_partial | sync
+    resume_strategy: str = "reprefill"  # reprefill | kv_snapshot
+    decode_chunk: int = 1              # tokens per engine step per slot
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    lr: float = 1e-6
+    weight_decay: float = 0.01
+    betas: Tuple[float, float] = (0.9, 0.999)
+    eps: float = 1e-8
+    grad_clip: float = 1.0
+    warmup_steps: int = 10
+    total_steps: int = 1000
+    # GRPO
+    clip_low: float = 0.2              # paper: clip ratio low 0.2
+    clip_high: float = 0.28            # paper: clip ratio high 0.28 (dual clip)
+    kl_coef: float = 0.0               # paper: 0.0
+    entropy_coef: float = 0.0          # paper: 0.0
+    loss_agg: str = "token_mean"       # paper: token mean
+    use_is_correction: bool = True     # the CoPRIS cross-stage IS switch
+    is_ratio_cap: float = 10.0         # numerical safety cap on exp(logp-L)
+    microbatches: int = 1
+    remat: bool = True
+    seed: int = 0
+
+
+@dataclass(frozen=True)
+class MeshConfig:
+    data: int = 16
+    model: int = 16
+    pod: int = 1
+
+    @property
+    def num_devices(self) -> int:
+        return self.data * self.model * self.pod
+
+    @property
+    def multi_pod(self) -> bool:
+        return self.pod > 1
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                          # train | prefill | decode
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}

@@ -1,0 +1,49 @@
+"""Activation-sharding context.
+
+Model code is mesh-agnostic; the launcher (dryrun / train / serve) installs
+the active mesh here and the model constrains a handful of key activations
+(`embedding output`, `logits`) so XLA's SPMD propagation doesn't drift into
+partial-logits + giant-psum solutions (observed: un-constrained (B,S,V)
+logits were computed with the contraction dim sharded and batch replicated,
+materialising 4.2 GB partial logits per device and an all-reduce over them).
+
+On CPU / no-mesh paths every call is a no-op.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_STATE: dict = {"mesh": None}
+
+
+def set_activation_mesh(mesh: Optional[Mesh]):
+    _STATE["mesh"] = mesh
+
+
+def get_activation_mesh() -> Optional[Mesh]:
+    return _STATE["mesh"]
+
+
+def _resolve(tag):
+    mesh = _STATE["mesh"]
+    if tag is None:
+        return None
+    if tag == "dp":
+        axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        return axes if axes else None
+    if tag == "tp":
+        return "model" if "model" in mesh.axis_names else None
+    return tag
+
+
+def shard_activation(x, *tags):
+    """Constrain ``x`` to P(resolve(tags)...) on the installed mesh; no-op
+    without a mesh. Tags: "dp" (batch axes), "tp" ("model"), None."""
+    mesh = _STATE["mesh"]
+    if mesh is None:
+        return x
+    spec = P(*[_resolve(t) for t in tags])
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,48 @@
+"""Architecture registry.
+
+Each assigned architecture lives in its own module and exposes ``CONFIG``.
+``get_config(name)`` returns the full config; ``get_smoke_config(name)``
+returns the reduced (<=2 layer, d_model<=512, <=4 expert) variant used by the
+CPU smoke tests.
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.common.config import ModelConfig, INPUT_SHAPES, InputShape  # noqa: F401
+
+_ARCH_MODULES = {
+    "llama3.2-1b": "llama3_2_1b",
+    "rwkv6-1.6b": "rwkv6_1_6b",
+    "qwen3-14b": "qwen3_14b",
+    "musicgen-medium": "musicgen_medium",
+    "qwen3-moe-235b-a22b": "qwen3_moe_235b_a22b",
+    "granite-34b": "granite_34b",
+    "deepseek-moe-16b": "deepseek_moe_16b",
+    "llama-3.2-vision-90b": "llama3_2_vision_90b",
+    "gemma2-2b": "gemma2_2b",
+    "hymba-1.5b": "hymba_1_5b",
+    # the paper's own training setup (DeepSeek-R1-Distill-Qwen-7B analogue)
+    "paper-qwen-7b": "paper_qwen_7b",
+    # CPU-scale driver models
+    "tiny": "tiny",
+    "small-100m": "small_100m",
+}
+
+ASSIGNED_ARCHS = tuple(k for k in _ARCH_MODULES
+                       if k not in ("paper-qwen-7b", "tiny", "small-100m"))
+
+
+def list_archs():
+    return list(_ARCH_MODULES)
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(_ARCH_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_ARCH_MODULES[name]}")
+    return mod.CONFIG
+
+
+def get_smoke_config(name: str) -> ModelConfig:
+    return get_config(name).reduced()

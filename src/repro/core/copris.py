@@ -1,0 +1,213 @@
+"""CoPRIS trainer: rollout → reward → cross-stage IS → GRPO update.
+
+``make_train_step`` builds the *pure* training-step function (GRPO with
+cross-stage IS correction, microbatched grad accumulation, AdamW). The same
+function is lowered by launch/dryrun.py on the production mesh — what we
+dry-run is what we train.
+
+``CoPRISTrainer`` drives the full RL loop on a live model (the CPU-scale
+end-to-end example and the integration tests).
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.config import ModelConfig, RolloutConfig, TrainConfig
+from repro.core import grpo
+from repro.core.importance import pack_groups
+from repro.core.rollout import RolloutEngine
+from repro.models import model as M
+from repro.optim import adam, schedule
+
+FUSED_VOCAB_THRESHOLD = 8192     # above this, use the vocab-blocked logp path
+
+
+def make_loss_fn(cfg: ModelConfig, tcfg: TrainConfig, *, use_pallas=False):
+    aux_coef = cfg.moe.router_aux_coef if cfg.moe is not None else 0.0
+    big_vocab = cfg.vocab_size >= FUSED_VOCAB_THRESHOLD
+
+    def loss_fn(params, mb):
+        tokens = mb["tokens"]
+        inputs, targets = tokens[:, :-1], tokens[:, 1:]
+        mask = mb["response_mask"][:, 1:]
+        behaviour = mb["behaviour_logp"][:, 1:]
+        media = mb.get("media")
+        entropy = None
+        if big_vocab:
+            # fused logprob recompute — the paper's "Cal logprob" stage.
+            # vocab_block=0: under pjit the (B, S, V) logits shard over
+            # (data, model) to a small per-device block, and XLA keeps full
+            # sharding freedom; dynamic-slicing a vocab-sharded weight
+            # (the blocked path) forces resharding (dry-run HLO finding).
+            logp_new, aux = M.score_logprobs(
+                params, cfg, inputs, targets, media=media,
+                use_pallas=use_pallas, remat=tcfg.remat, vocab_block=0)
+        else:
+            logits, aux = M.forward_train(params, cfg, inputs, media=media,
+                                          use_pallas=use_pallas,
+                                          remat=tcfg.remat)
+            logp_all = jax.nn.log_softmax(logits, axis=-1)
+            logp_new = jnp.take_along_axis(
+                logp_all, targets[..., None], axis=-1)[..., 0]
+            entropy = -(jnp.exp(logp_all) * logp_all).sum(-1)
+        loss, metrics = grpo.grpo_loss(
+            logp_new, behaviour, mb["advantages"], mask,
+            clip_low=tcfg.clip_low, clip_high=tcfg.clip_high,
+            use_is=tcfg.use_is_correction, is_ratio_cap=tcfg.is_ratio_cap,
+            loss_agg=tcfg.loss_agg, entropy=entropy,
+            entropy_coef=tcfg.entropy_coef)
+        if entropy is not None:
+            denom = jnp.maximum(mask.sum(), 1.0)
+            metrics["entropy"] = (entropy * mask).sum() / denom
+        total = loss + aux_coef * aux["router_aux"]
+        metrics["pg_loss"] = loss
+        metrics["router_aux"] = aux["router_aux"]
+        return total, metrics
+
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, *, use_pallas=False):
+    """Returns step(params, opt_state, batch, lr) -> (params, opt_state,
+    metrics). ``batch`` leaves have leading dim N = microbatches * m."""
+    loss_fn = make_loss_fn(cfg, tcfg, use_pallas=use_pallas)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+    k = tcfg.microbatches
+
+    def train_step(params, opt_state, batch, lr):
+        if k > 1:
+            mbs = jax.tree.map(
+                lambda a: a.reshape((k, a.shape[0] // k) + a.shape[1:]), batch)
+
+            def accum(carry, mb):
+                gsum, msum = carry
+                (_, metrics), g = grad_fn(params, mb)
+                gsum = jax.tree.map(jnp.add, gsum, g)
+                msum = jax.tree.map(jnp.add, msum, metrics)
+                return (gsum, msum), None
+
+            zero_g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            mb0 = jax.tree.map(lambda a: a[0], mbs)
+            (_, metrics0), g0 = grad_fn(params, mb0)
+            (gsum, msum), _ = jax.lax.scan(
+                accum, (g0, metrics0), jax.tree.map(lambda a: a[1:], mbs))
+            grads = jax.tree.map(lambda g: g / k, gsum)
+            metrics = jax.tree.map(lambda m: m / k, msum)
+        else:
+            (_, metrics), grads = grad_fn(params, batch)
+        params, opt_state, om = adam.update(
+            grads, opt_state, params, lr=lr, betas=tcfg.betas, eps=tcfg.eps,
+            weight_decay=tcfg.weight_decay, grad_clip=tcfg.grad_clip)
+        metrics.update(om)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+
+
+class CoPRISTrainer:
+    """Full RL loop on live hardware (CPU-scale models)."""
+
+    def __init__(self, model_cfg: ModelConfig, ro_cfg: RolloutConfig,
+                 tcfg: TrainConfig, task, *, eos_id: int, key=None,
+                 params=None, use_pallas: bool = False):
+        self.cfg = model_cfg
+        self.ro = ro_cfg
+        self.tcfg = tcfg
+        self.task = task
+        key = key if key is not None else jax.random.PRNGKey(tcfg.seed)
+        self.key, k_init = jax.random.split(key)
+        self.params = params if params is not None else M.init_params(k_init, model_cfg)
+        self.opt_state = adam.init(self.params)
+        from repro.core.reward_worker import AsyncRewardWorker
+        self.reward_worker = AsyncRewardWorker(task.reward)
+        self.engine = RolloutEngine(model_cfg, ro_cfg, task.sample_prompt,
+                                    eos_id=eos_id, use_pallas=use_pallas,
+                                    on_finish=self.reward_worker.submit)
+        self._train_step = jax.jit(make_train_step(model_cfg, tcfg,
+                                                   use_pallas=use_pallas))
+        self.stage = 0
+        self.history = []
+
+    # ------------------------------------------------------------------
+    def step(self) -> dict:
+        t0 = time.perf_counter()
+        self.key, k_roll = jax.random.split(self.key)
+        groups, roll_stats = self.engine.collect(self.params, self.stage, k_roll)
+
+        # rewards were computed asynchronously during rollout (paper §5.1:
+        # async rewards on both arms); gather resolves any stragglers
+        self.reward_worker.gather(groups)
+        t_reward = time.perf_counter()
+
+        batch = pack_groups(groups, max_len=self.engine.max_len)
+        adv = grpo.group_advantages(
+            jnp.asarray(batch["rewards"]), self.ro.group_size)
+        jb = {k: jnp.asarray(v) for k, v in batch.items()
+              if k in ("tokens", "response_mask", "behaviour_logp")}
+        jb["advantages"] = adv
+        lr = schedule.warmup_constant(jnp.asarray(self.stage, jnp.float32),
+                                      lr=self.tcfg.lr,
+                                      warmup_steps=self.tcfg.warmup_steps)
+        self.params, self.opt_state, metrics = self._train_step(
+            self.params, self.opt_state, jb, lr)
+        t_end = time.perf_counter()
+
+        out = {k: float(v) for k, v in metrics.items()}
+        out.update(
+            step=self.stage,
+            reward_mean=float(batch["rewards"].mean()),
+            reward_std=float(batch["rewards"].std()),
+            rollout_time=roll_stats["wall_time"],
+            reward_time=t_reward - t0 - roll_stats["wall_time"],
+            update_time=t_end - t_reward,
+            step_time=t_end - t0,
+            off_policy_frac=(roll_stats["off_policy_tokens"]
+                             / max(1, roll_stats["generated"])),
+            multi_stage_trajs=roll_stats["multi_stage_trajs"],
+            utilization=roll_stats["utilization"],
+            buffer_unfinished=roll_stats["buffer_unfinished"],
+            mean_resp_len=float(np.mean([len(t.response_tokens)
+                                         for g in groups
+                                         for t in g.trajectories])),
+        )
+        self.stage += 1
+        self.history.append(out)
+        return out
+
+    # ------------------------------------------------------------------
+    def evaluate(self, n_prompts: int = 32, *, key=None) -> float:
+        """Greedy accuracy on fresh task prompts (exact reward)."""
+        from repro.core.trajectory import Group
+        key = key if key is not None else jax.random.PRNGKey(123)
+        correct = 0.0
+        for i in range(n_prompts):
+            cache = M.init_cache(self.cfg, 1, self.engine.max_len)
+            prompt, answer = self.task.sample_prompt()
+            L = len(prompt)
+            pad = np.zeros(-(-L // 16) * 16, np.int32)
+            pad[:L] = prompt
+            logits, cache = M.prefill(self.params, self.cfg,
+                                      jnp.asarray(pad)[None], jnp.asarray([L]),
+                                      cache)
+            toks, cl = [], L
+            tok = int(jnp.argmax(logits[0]))
+            for _ in range(32):
+                toks.append(tok)
+                if tok == getattr(self.task, "eos_id", 13):
+                    break
+                lg, cache = M.decode_step(self.params, self.cfg,
+                                          jnp.asarray([tok]), cache,
+                                          jnp.asarray([cl]))
+                cl += 1
+                tok = int(jnp.argmax(lg[0]))
+            correct += self.task.reward(toks, answer)
+        return correct / n_prompts

@@ -1,0 +1,76 @@
+"""GRPO objective with cross-stage importance sampling (paper eqs. 2–5, 8).
+
+* group-relative advantages: A_i = (R_i - mean_group) / std_group
+* per-token IS ratio r = exp(logp_current - behaviour_logp); for the
+  "w/o IS" ablation the behaviour is replaced by stop_grad(logp_current)
+  (pseudo on-policy, ratio == 1)
+* asymmetric clip (clip_low=0.2 / clip_high=0.28, Table 3)
+* token-mean aggregation
+* optional entropy bonus and low-var KL to a reference policy (β=0 default)
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def group_advantages(rewards, group_size: int, *, eps: float = 1e-6):
+    """rewards: (N,) flattened group-major -> (N,) advantages (eq. 5)."""
+    r = rewards.reshape(-1, group_size)
+    mean = r.mean(axis=1, keepdims=True)
+    std = r.std(axis=1, keepdims=True)
+    return ((r - mean) / (std + eps)).reshape(-1)
+
+
+def grpo_loss(logp_new, behaviour_logp, advantages, mask, *,
+              clip_low: float = 0.2, clip_high: float = 0.28,
+              use_is: bool = True, is_ratio_cap: float = 10.0,
+              loss_agg: str = "token_mean",
+              entropy: Optional[jnp.ndarray] = None,
+              entropy_coef: float = 0.0,
+              ref_logp: Optional[jnp.ndarray] = None,
+              kl_coef: float = 0.0):
+    """All (N, T') token-aligned; advantages (N,). Returns (loss, metrics)."""
+    adv = advantages[:, None]
+    if use_is:
+        log_ratio = logp_new - behaviour_logp
+        # numerical safety: behaviour logps come from a different stage;
+        # cap the ratio so one stale token cannot blow up the update
+        log_ratio = jnp.clip(log_ratio, -jnp.log(is_ratio_cap), jnp.log(is_ratio_cap))
+    else:
+        log_ratio = logp_new - jax.lax.stop_gradient(logp_new)
+    ratio = jnp.exp(log_ratio)
+
+    unclipped = ratio * adv
+    clipped = jnp.clip(ratio, 1.0 - clip_low, 1.0 + clip_high) * adv
+    obj = jnp.minimum(unclipped, clipped)
+    loss_tok = -obj
+
+    if kl_coef > 0.0 and ref_logp is not None:
+        # low-var KL (k3 estimator): exp(ref-new) - (ref-new) - 1
+        d = ref_logp - logp_new
+        loss_tok = loss_tok + kl_coef * (jnp.exp(d) - d - 1.0)
+    if entropy_coef > 0.0 and entropy is not None:
+        loss_tok = loss_tok - entropy_coef * entropy
+
+    denom = jnp.maximum(mask.sum(), 1.0)
+    if loss_agg == "token_mean":
+        loss = (loss_tok * mask).sum() / denom
+    elif loss_agg == "seq_mean":
+        per_seq = (loss_tok * mask).sum(-1) / jnp.maximum(mask.sum(-1), 1.0)
+        loss = per_seq.mean()
+    else:
+        raise ValueError(loss_agg)
+
+    clip_frac = ((jnp.abs(ratio - 1.0) > clip_low) * mask).sum() / denom
+    approx_kl = ((behaviour_logp - logp_new) * mask).sum() / denom if use_is \
+        else jnp.zeros(())
+    metrics = {
+        "ratio_mean": (ratio * mask).sum() / denom,
+        "ratio_max": jnp.max(jnp.where(mask > 0, ratio, 1.0)),
+        "clip_frac": clip_frac,
+        "approx_kl": approx_kl,
+    }
+    return loss, metrics

@@ -1,0 +1,71 @@
+"""Cross-stage Importance Sampling Correction — batch packing + ratios.
+
+Packing turns a list of complete groups into fixed-shape tensors. Each token
+position carries the *behaviour* log-prob recorded at sampling time by the
+stage that generated it (eq. 6: L_i is a concat across stages). The training
+step recomputes log-probs under the current policy and uses
+
+    r_t = exp( logp_theta(t) - L_t )                       (eq. 8)
+
+as the per-token IS ratio inside the clipped GRPO objective.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from repro.core.trajectory import Group
+
+
+def _round_up(n, m):
+    return -(-n // m) * m
+
+
+def pack_groups(groups: List[Group], *, pad_multiple: int = 64,
+                pad_id: int = 0, max_len: int | None = None):
+    """Returns a dict of numpy arrays, trajectories flattened over groups in
+    order (group-major, so reshaping to (B, G) recovers group structure):
+
+    tokens          (N, T) int32 — prompt + response, right-padded
+    prompt_lens     (N,)   int32
+    total_lens      (N,)   int32
+    response_mask   (N, T) float32 — 1.0 on response token positions
+    behaviour_logp  (N, T) float32 — aligned to token positions (response only)
+    stage_ids       (N, T) int32  — policy version per token (-1 elsewhere)
+    rewards         (N,)   float32
+    group_index     (N,)   int32
+    """
+    trajs = [t for g in groups for t in g.trajectories]
+    N = len(trajs)
+    T = max(t.total_len for t in trajs)
+    T = _round_up(T, pad_multiple)
+    if max_len is not None:
+        T = min(T, max_len)
+
+    tokens = np.full((N, T), pad_id, np.int32)
+    response_mask = np.zeros((N, T), np.float32)
+    behaviour = np.zeros((N, T), np.float32)
+    stages = np.full((N, T), -1, np.int32)
+    prompt_lens = np.zeros(N, np.int32)
+    total_lens = np.zeros(N, np.int32)
+    rewards = np.zeros(N, np.float32)
+    group_index = np.zeros(N, np.int32)
+
+    for n, t in enumerate(trajs):
+        full = t.full_tokens()[:T]
+        P = len(t.prompt_tokens)
+        L = len(full)
+        tokens[n, :L] = full
+        prompt_lens[n] = P
+        total_lens[n] = L
+        R = L - P
+        response_mask[n, P:L] = 1.0
+        behaviour[n, P:L] = np.asarray(t.behaviour_logps[:R], np.float32)
+        stages[n, P:L] = np.asarray(t.stage_ids[:R], np.int32)
+        rewards[n] = 0.0 if t.reward is None else t.reward
+        group_index[n] = t.group_id
+
+    return dict(tokens=tokens, prompt_lens=prompt_lens, total_lens=total_lens,
+                response_mask=response_mask, behaviour_logp=behaviour,
+                stage_ids=stages, rewards=rewards, group_index=group_index)

@@ -1,0 +1,65 @@
+"""Asynchronous reward computation.
+
+The paper applies asynchronous rewards to BOTH arms of its comparison
+("to guarantee fairness in comparison, asynchronous rewards are applied to
+both the baseline and CoPRIS", §5.1): reward evaluation (rule-based checking
+here; sandboxed execution or reward models in general) overlaps with the
+rollout instead of serialising after it.
+
+The engine invokes ``submit`` the moment a trajectory finishes; the trainer
+calls ``gather`` once the batch is collected — by then most rewards are
+already done. Rule-based math rewards are microseconds, so the win here is
+architectural (the hook is where a slow verifier/RM would plug in); the
+thread pool keeps the JAX main thread free either way.
+"""
+from __future__ import annotations
+
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Callable, Dict, List
+
+from repro.core.trajectory import Group, Trajectory
+
+
+class AsyncRewardWorker:
+    def __init__(self, reward_fn: Callable, *, max_workers: int = 4):
+        self.reward_fn = reward_fn
+        self.pool = ThreadPoolExecutor(max_workers=max_workers,
+                                       thread_name_prefix="reward")
+        self._pending: Dict[int, Future] = {}
+        self.computed = 0
+
+    # -- engine-side hook ------------------------------------------------
+    def submit(self, traj: Trajectory, answer) -> None:
+        """Called by the rollout engine when a trajectory finishes."""
+        if traj.traj_id in self._pending or traj.reward is not None:
+            return
+        self._pending[traj.traj_id] = self.pool.submit(
+            self.reward_fn, list(traj.response_tokens), answer)
+
+    # -- trainer-side ------------------------------------------------------
+    def gather(self, groups: List[Group]) -> int:
+        """Resolve rewards for every trajectory in ``groups`` (blocking on
+        any still-running futures; computing inline for any the engine never
+        submitted — e.g. sync mode without the hook). Returns #resolved."""
+        n = 0
+        for g in groups:
+            for t in g.trajectories:
+                if t.reward is not None:
+                    continue
+                fut = self._pending.pop(t.traj_id, None)
+                if fut is not None:
+                    t.reward = float(fut.result())
+                else:
+                    t.reward = float(self.reward_fn(
+                        list(t.response_tokens), g.answer))
+                n += 1
+        self.computed += n
+        return n
+
+    def drop(self, traj_id: int) -> None:
+        f = self._pending.pop(traj_id, None)
+        if f is not None:
+            f.cancel()
+
+    def shutdown(self):
+        self.pool.shutdown(wait=False, cancel_futures=True)

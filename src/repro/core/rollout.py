@@ -1,0 +1,274 @@
+"""Slot-pool rollout engine — Concurrency-Controlled Partial Rollout.
+
+TPU-native continuous batching (DESIGN.md §3): a fixed pool of ``N'`` slots,
+each slot owning a region of the batched KV/state cache. Every engine step
+runs ONE jitted decode over all N' slots; finished slots are refilled
+immediately by the :class:`ConcurrencyScheduler` (resume buffered partials
+first). Early termination fires when B groups are complete; in-flight
+trajectories stay in the buffer with their per-stage behaviour log-probs.
+
+Modes: "copris" | "sync" (the veRL-style baseline) | "naive_partial"
+(Kimi-K1.5-style one-shot over-generation).
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Callable, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.config import ModelConfig, RolloutConfig
+from repro.core.buffer import TrajectoryBuffer
+from repro.core.scheduler import ConcurrencyScheduler
+from repro.core.trajectory import Group, Trajectory
+from repro.models import model as M
+from repro.sampling import kv_cache as kvc
+from repro.sampling import sampler
+
+PREFILL_BUCKET = 64
+
+
+def _round_up(n, m):
+    return -(-n // m) * m
+
+
+class RolloutEngine:
+    def __init__(self, model_cfg: ModelConfig, ro_cfg: RolloutConfig,
+                 prompt_source: Callable[[], Tuple[np.ndarray, object]], *,
+                 eos_id: int, media=None, use_pallas: bool = False,
+                 max_len: Optional[int] = None,
+                 on_finish: Optional[Callable] = None):
+        self.cfg = model_cfg
+        self.ro = ro_cfg
+        self.prompt_source = prompt_source
+        self.eos_id = eos_id
+        self.media = media
+        self.use_pallas = use_pallas
+
+        self.on_finish = on_finish      # async-reward hook: (traj, answer)
+        self._answers = {}
+        self.pool = (ro_cfg.batch_size * ro_cfg.group_size
+                     if ro_cfg.mode == "sync" else ro_cfg.concurrency)
+        self.max_len = max_len or _round_up(
+            ro_cfg.max_prompt_len + ro_cfg.max_response_len, PREFILL_BUCKET)
+
+        self.buffer = TrajectoryBuffer()
+        self.cache = M.init_cache(model_cfg, self.pool, self.max_len)
+        self.cache_len = np.zeros(self.pool, np.int32)
+        self.last_token = np.zeros(self.pool, np.int32)
+        self.slots: List[Optional[Trajectory]] = [None] * self.pool
+        self._group_counter = 0
+        self._step_counter = 0
+        self.stats_total = {}
+
+        # ---- jitted engine step --------------------------------------
+        @functools.partial(jax.jit, donate_argnums=(1,))
+        def _decode(params, cache, tokens, cache_len, key):
+            logits, cache = M.decode_step(params, model_cfg, tokens, cache,
+                                          cache_len, media=self._media_for(self.pool),
+                                          use_pallas=use_pallas)
+            tok, logp = sampler.sample(key, logits,
+                                       temperature=ro_cfg.temperature,
+                                       top_p=ro_cfg.top_p, top_k=ro_cfg.top_k)
+            return tok, logp, cache
+
+        @functools.partial(jax.jit, donate_argnums=(1,),
+                           static_argnames=("pad_len",))
+        def _prefill_insert(params, cache, tokens, length, slot_id, key,
+                            pad_len):
+            del pad_len
+            scratch = M.init_cache(model_cfg, 1, self.max_len)
+            logits, scratch = M.prefill(params, model_cfg, tokens[None, :],
+                                        length[None], scratch,
+                                        media=self._media_for(1),
+                                        use_pallas=use_pallas)
+            tok, logp = sampler.sample(key, logits,
+                                       temperature=ro_cfg.temperature,
+                                       top_p=ro_cfg.top_p, top_k=ro_cfg.top_k)
+            cache = kvc.insert_slots(cache, scratch, slot_id[None])
+            return tok[0], logp[0], cache
+
+        self._decode = _decode
+        self._prefill_insert = _prefill_insert
+
+    # ------------------------------------------------------------------
+    def _media_for(self, batch):
+        if self.media is None:
+            return None
+        m = jnp.asarray(self.media)
+        return jnp.broadcast_to(m[None], (batch,) + m.shape)
+
+    def _new_group(self) -> Group:
+        prompt, answer = self.prompt_source()
+        g = Group(group_id=self._group_counter, prompt_tokens=np.asarray(prompt, np.int32),
+                  answer=answer, size=self.ro.group_size)
+        self._answers[g.group_id] = answer
+        self._group_counter += 1
+        return g
+
+    # ------------------------------------------------------------------
+    def _fill_slot(self, i: int, traj: Trajectory, params, key):
+        """(Re-)prefill ``traj`` into slot i.
+
+        resume_strategy="reprefill" (default, paper-faithful): re-prefill
+        prompt + partial response under the CURRENT policy — the K/V the
+        continuation attends to match the policy that will keep sampling.
+
+        resume_strategy="kv_snapshot": restore the evicted slot state
+        verbatim — no re-prefill cost, but after a policy update the
+        continuation attends to STALE K/V, so the effective behaviour
+        distribution is not any single policy's (bias/throughput tradeoff
+        the paper avoids by buffering tokens, not KV; measured in
+        tests/test_kv_snapshot.py)."""
+        if (self.ro.resume_strategy == "kv_snapshot"
+                and traj.kv_snapshot is not None):
+            self.cache = kvc.insert_slots(self.cache, traj.kv_snapshot,
+                                          jnp.asarray([i]))
+            self.slots[i] = traj
+            self.cache_len[i] = traj.snap_cache_len
+            self.last_token[i] = traj.snap_last_token
+            traj.kv_snapshot = None
+            self._stats["resumed"] += 1
+            self._stats["snapshot_resumes"] = \
+                self._stats.get("snapshot_resumes", 0) + 1
+            return
+        tokens = traj.full_tokens()
+        L = len(tokens)
+        assert L < self.max_len, f"trajectory length {L} >= max_len {self.max_len}"
+        pad_len = _round_up(L, PREFILL_BUCKET)
+        padded = np.zeros(pad_len, np.int32)
+        padded[:L] = tokens
+        tok, logp, self.cache = self._prefill_insert(
+            params, self.cache, jnp.asarray(padded), jnp.asarray(L, jnp.int32),
+            jnp.asarray(i, jnp.int32), key, pad_len=pad_len)
+        traj.append(int(tok), float(logp), self._stage)
+        self.slots[i] = traj
+        self.cache_len[i] = L
+        self.last_token[i] = int(tok)
+        self._stats["prefill_count"] += 1
+        self._stats["prefill_tokens"] += L
+        if traj.resume_count > 0 and len(traj.response_tokens) > 1:
+            self._stats["resumed"] += 1
+
+    def _finish(self, traj: Trajectory, reason: str, sched: ConcurrencyScheduler):
+        traj.done = True
+        traj.finish_reason = reason
+        if self.on_finish is not None:      # async reward pipeline
+            self.on_finish(traj, self._answers.get(traj.group_id))
+        sched.release(traj)
+
+    def _maybe_done(self, traj: Trajectory) -> Optional[str]:
+        if traj.response_tokens and traj.response_tokens[-1] == self.eos_id:
+            return "eos"
+        if len(traj.response_tokens) >= self.ro.max_response_len:
+            return "length"
+        if traj.total_len >= self.max_len - 1:
+            return "length"
+        return None
+
+    # ------------------------------------------------------------------
+    def collect(self, params, stage_id: int, key) -> Tuple[List[Group], dict]:
+        """Run rollout until B complete groups are collected (early
+        termination). Returns (groups, stats)."""
+        self._stage = stage_id
+        self._stats = dict(prefill_count=0, prefill_tokens=0, decode_steps=0,
+                           active_slot_steps=0, slot_steps=0, generated=0,
+                           resumed=0, evicted=0)
+        t0 = time.perf_counter()
+        sched = ConcurrencyScheduler(self.ro, self.buffer, self._new_group)
+        if self.ro.mode == "sync":
+            assert len(self.buffer) == 0, "sync mode must start with empty buffer"
+
+        def refill(i, key):
+            # loop: a prefill's very first sampled token may already be EOS
+            n = 0
+            while not sched.done:
+                traj = sched.next_request()
+                if traj is None:
+                    self.slots[i] = None
+                    return
+                self._fill_slot(i, traj, params, jax.random.fold_in(key, n))
+                n += 1
+                reason = self._maybe_done(traj)
+                if reason is None:
+                    return
+                self._finish(traj, reason, sched)
+                self.slots[i] = None
+                sched.harvest()
+
+        # initial fill
+        for i in range(self.pool):
+            if self.slots[i] is None and not sched.done:
+                refill(i, jax.random.fold_in(key, self._step_counter * self.pool + i))
+
+        while not sched.done:
+            active = [i for i, t in enumerate(self.slots) if t is not None]
+            if not active:
+                break                      # nothing in flight and scheduler idle
+            self._step_counter += 1
+            k = jax.random.fold_in(key, 2_000_000_000 + self._step_counter)
+            tok, logp, self.cache = self._decode(
+                params, self.cache, jnp.asarray(self.last_token),
+                jnp.asarray(self.cache_len), k)
+            tok = np.asarray(tok)
+            logp = np.asarray(logp)
+            self._stats["decode_steps"] += 1
+            self._stats["slot_steps"] += self.pool
+            self._stats["active_slot_steps"] += len(active)
+            for i in active:
+                self.cache_len[i] += 1
+            freed = []
+            for i in active:
+                traj = self.slots[i]
+                traj.append(int(tok[i]), float(logp[i]), stage_id)
+                self.last_token[i] = int(tok[i])
+                self._stats["generated"] += 1
+                reason = self._maybe_done(traj)
+                if reason:
+                    self._finish(traj, reason, sched)
+                    self.slots[i] = None
+                    freed.append(i)
+            if freed:
+                sched.harvest()
+                for i in freed:
+                    if not sched.done:
+                        refill(i, jax.random.fold_in(
+                            key, 1_000_000_000 + self._step_counter * self.pool + i))
+
+        # early termination: evict in-flight work back to the buffer
+        for i, traj in enumerate(self.slots):
+            if traj is not None:
+                if self.ro.resume_strategy == "kv_snapshot":
+                    traj.kv_snapshot = kvc.extract_slots(
+                        self.cache, jnp.asarray([i]))
+                    traj.snap_cache_len = int(self.cache_len[i])
+                    traj.snap_last_token = int(self.last_token[i])
+                sched.release(traj)
+                self.slots[i] = None
+                self._stats["evicted"] += 1
+        sched.harvest()
+
+        groups = sched.completed[: self.ro.batch_size]
+        # surplus complete groups stay buffered for the next step
+        for g in sched.completed[self.ro.batch_size:]:
+            self.buffer.add_group(g)
+
+        st = self._stats
+        st["wall_time"] = time.perf_counter() - t0
+        st["buffer_unfinished"] = self.buffer.num_unfinished
+        st["buffer_waiting"] = self.buffer.num_finished_waiting
+        st["utilization"] = (st["active_slot_steps"] / st["slot_steps"]
+                             if st["slot_steps"] else 1.0)
+        n_traj = sum(len(g.trajectories) for g in groups)
+        st["off_policy_tokens"] = sum(t.off_policy_tokens
+                                      for g in groups for t in g.trajectories)
+        st["multi_stage_trajs"] = sum(1 for g in groups for t in g.trajectories
+                                      if t.num_stages > 1)
+        st["batch_trajs"] = n_traj
+        for k_, v in st.items():
+            if isinstance(v, (int, float)):
+                self.stats_total[k_] = self.stats_total.get(k_, 0) + v
+        return groups, st

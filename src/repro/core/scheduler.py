@@ -1,0 +1,89 @@
+"""Concurrency-Controlled Generation scheduler (paper §4).
+
+Pure-Python scheduling policy, separated from the JAX engine so its
+invariants are unit/property-testable:
+
+* exactly ``concurrency`` requests in flight whenever work exists
+  (mode="copris");
+* dispatch priority: resume buffered partials > complete under-sampled
+  buffered groups > open a new group (Prioritized Resumption);
+* early termination once ``batch_size`` groups are complete;
+* mode="sync": submit B*G once, never early-terminate, never buffer;
+* mode="naive_partial": submit ``initial_concurrency`` once, no refill
+  (the Kimi-K1.5-style baseline of Table 2).
+"""
+from __future__ import annotations
+
+from typing import Callable, List, Optional
+
+from repro.common.config import RolloutConfig
+from repro.core.buffer import TrajectoryBuffer
+from repro.core.trajectory import Group, Trajectory
+
+
+class ConcurrencyScheduler:
+    def __init__(self, cfg: RolloutConfig, buffer: TrajectoryBuffer,
+                 new_group: Callable[[], Group]):
+        self.cfg = cfg
+        self.buffer = buffer
+        self.new_group = new_group
+        self.completed: List[Group] = []
+        self.dispatched = 0            # requests handed out this stage
+        self.in_flight: set = set()    # traj_ids currently occupying slots
+
+    # ------------------------------------------------------------------
+    @property
+    def target_batch(self) -> int:
+        return self.cfg.batch_size
+
+    @property
+    def done(self) -> bool:
+        if self.cfg.mode == "sync":
+            return (len(self.completed) >= self.target_batch
+                    and self.buffer.num_unfinished == 0)
+        return len(self.completed) >= self.target_batch
+
+    def harvest(self):
+        """Move any newly-complete groups out of the buffer."""
+        self.completed.extend(self.buffer.pop_complete_groups())
+
+    # ------------------------------------------------------------------
+    def next_request(self) -> Optional[Trajectory]:
+        """What should fill a freed slot? None -> leave the slot idle."""
+        mode = self.cfg.mode
+        t = None
+        if mode == "sync":
+            # fixed workload: spawn until B groups x G samples exist, no reuse
+            t = self.buffer.pop_unspawned()
+            if t is None and (self.buffer.num_groups + len(self.completed)
+                              < self.target_batch):
+                g = self.new_group()
+                self.buffer.add_group(g)
+                t = g.spawn()
+        elif mode == "naive_partial":
+            # one-shot submission up to initial concurrency, then no refill
+            if self.dispatched < self.cfg.concurrency:
+                t = self._copris_pick()
+        elif mode == "copris":
+            if not self.done:
+                t = self._copris_pick()
+        else:
+            raise ValueError(mode)
+        if t is not None:
+            self.dispatched += 1
+            self.in_flight.add(t.traj_id)
+        return t
+
+    def release(self, traj: Trajectory):
+        """Slot freed (trajectory finished or evicted at stage end)."""
+        self.in_flight.discard(traj.traj_id)
+
+    def _copris_pick(self) -> Optional[Trajectory]:
+        t = self.buffer.pop_resumable(exclude=self.in_flight)  # prioritized resumption
+        if t is None:
+            t = self.buffer.pop_unspawned()
+        if t is None:
+            g = self.new_group()
+            self.buffer.add_group(g)
+            t = g.spawn()
+        return t

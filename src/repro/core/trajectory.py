@@ -1,0 +1,93 @@
+"""Trajectory and group bookkeeping for partial rollout.
+
+A *trajectory* is one sampled response for one prompt; a *group* is the G
+trajectories of a single prompt (GRPO's intra-group advantage unit). CoPRIS's
+buffer holds trajectories across training stages, each token annotated with
+the behaviour log-prob and the policy version ("stage") that produced it —
+eq. (6): L_i = concat(L_i^(1), ..., L_i^(K)).
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import numpy as np
+
+_next_id = itertools.count()
+
+
+@dataclass
+class Trajectory:
+    group_id: int
+    sample_idx: int                       # position within the group (0..G-1)
+    prompt_tokens: np.ndarray             # (P,) int32
+    response_tokens: List[int] = field(default_factory=list)
+    behaviour_logps: List[float] = field(default_factory=list)   # per response token
+    stage_ids: List[int] = field(default_factory=list)           # policy version per token
+    done: bool = False
+    finish_reason: Optional[str] = None   # "eos" | "length"
+    reward: Optional[float] = None
+    traj_id: int = field(default_factory=lambda: next(_next_id))
+    # bookkeeping for stats
+    resume_count: int = 0
+    # kv_snapshot resume strategy: per-slot state captured at eviction
+    # (cache pytree slice, cache_len, pending last token). Cleared on resume.
+    kv_snapshot: Optional[object] = None
+    snap_cache_len: int = 0
+    snap_last_token: int = 0
+
+    # ------------------------------------------------------------------
+    @property
+    def num_stages(self) -> int:
+        return len(set(self.stage_ids))
+
+    @property
+    def off_policy_tokens(self) -> int:
+        """Tokens generated under a stage older than the latest one present."""
+        if not self.stage_ids:
+            return 0
+        last = max(self.stage_ids)
+        return sum(1 for s in self.stage_ids if s != last)
+
+    @property
+    def total_len(self) -> int:
+        return len(self.prompt_tokens) + len(self.response_tokens)
+
+    def full_tokens(self) -> np.ndarray:
+        return np.concatenate([self.prompt_tokens,
+                               np.asarray(self.response_tokens, np.int32)])
+
+    def append(self, token: int, logp: float, stage: int):
+        assert not self.done, "appending to a finished trajectory"
+        self.response_tokens.append(int(token))
+        self.behaviour_logps.append(float(logp))
+        self.stage_ids.append(int(stage))
+
+    def check_invariants(self):
+        assert len(self.response_tokens) == len(self.behaviour_logps) \
+            == len(self.stage_ids), "token/logp/stage misalignment"
+        if self.stage_ids:
+            assert all(a <= b for a, b in zip(self.stage_ids, self.stage_ids[1:])), \
+                "stage ids must be non-decreasing (concat along token dim)"
+
+
+@dataclass
+class Group:
+    group_id: int
+    prompt_tokens: np.ndarray
+    answer: object                        # task-specific ground truth
+    size: int                             # G
+    trajectories: List[Trajectory] = field(default_factory=list)
+
+    def spawn(self) -> Trajectory:
+        t = Trajectory(group_id=self.group_id,
+                       sample_idx=len(self.trajectories),
+                       prompt_tokens=self.prompt_tokens)
+        self.trajectories.append(t)
+        return t
+
+    @property
+    def complete(self) -> bool:
+        return (len(self.trajectories) == self.size
+                and all(t.done for t in self.trajectories))

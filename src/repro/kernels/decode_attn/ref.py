@@ -1,0 +1,2 @@
+"""Oracle: re-export the model's pure-jnp decode attention."""
+from repro.models.attention import decode_attention  # noqa: F401

@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for flash attention: both a naive O(S²) materialising
+reference and the chunked online-softmax reference from the model code."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import chunked_attention  # chunked oracle
+
+NEG_INF = -1e30
+
+
+def naive_attention(q, k, v, *, causal=True, window=0, attn_softcap=0.0,
+                    scale=0.0):
+    """q: (B, Sq, H, hd); k, v: (B, Sk, KV, hd). Materialises the full score
+    matrix — ground truth for small shapes."""
+    B, Sq, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    rep = H // KV
+    if scale <= 0.0:
+        scale = hd ** -0.5
+    kr = jnp.repeat(k, rep, axis=2)
+    vr = jnp.repeat(v, rep, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   kr.astype(jnp.float32)) * scale
+    if attn_softcap > 0.0:
+        s = jnp.tanh(s / attn_softcap) * attn_softcap
+    q_pos = jnp.arange(Sq)[:, None]
+    k_pos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, vr.astype(jnp.float32))
+    return out.astype(q.dtype)

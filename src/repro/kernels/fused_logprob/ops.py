@@ -1,0 +1,23 @@
+"""Jit'd wrapper for the fused logprob kernel (model layout (B, S, d))."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.fused_logprob.fused_logprob import fused_logprob_rows
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "logit_softcap", "block_rows", "block_v", "interpret"))
+def fused_logprob(hidden, w, targets, *, logit_softcap=0.0, block_rows=256,
+                  block_v=512, interpret=None):
+    """hidden: (B, S, d); w: (d, V); targets: (B, S) -> fp32 (B, S)."""
+    interp = (jax.default_backend() == "cpu") if interpret is None else interpret
+    B, S, d = hidden.shape
+    out = fused_logprob_rows(hidden.reshape(B * S, d), w,
+                             targets.reshape(B * S),
+                             logit_softcap=logit_softcap,
+                             block_rows=block_rows, block_v=block_v,
+                             interpret=interp)
+    return out.reshape(B, S)

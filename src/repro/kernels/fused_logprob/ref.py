@@ -1,0 +1,67 @@
+"""Pure-jnp oracle for the fused vocab-blocked logprob kernel.
+
+Computes ``log p(target | hidden)`` without materialising the full
+(B, S, V) probability tensor: streams over vocab blocks with a running
+logsumexp and gathers the target logit on the fly. This is the hot loop of
+CoPRIS's cross-stage IS recompute (the paper's "Cal logprob" stage, 15–37%
+of step time in Table 2).
+
+Shapes keep the (B, S) batch dims throughout — flattening to (B*S, ...)
+destroys the batch sharding under pjit and causes redundant compute across
+the data axis (found via the dry-run HLO walker; see EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _softcap(x, cap):
+    return jnp.tanh(x / cap) * cap if cap and cap > 0.0 else x
+
+
+def fused_logprob(hidden, w, targets, *, logit_softcap: float = 0.0,
+                  vocab_block: int = 0):
+    """hidden: (B, S, d); w: (d, V); targets: (B, S) int32.
+
+    Returns fp32 (B, S) log-probabilities. ``vocab_block`` 0 -> single shot
+    (small vocab); otherwise streams V in blocks of that size.
+    """
+    B, S, d = hidden.shape
+    V = w.shape[1]
+
+    if vocab_block <= 0 or vocab_block >= V:
+        from repro.common.partitioning import shard_activation
+        logits = _softcap(
+            jnp.einsum("bsd,dv->bsv", hidden, w.astype(hidden.dtype),
+                       preferred_element_type=jnp.float32), logit_softcap)
+        # batch stays on the data axes, vocab on the model axis — prevents
+        # the partial-logits + all-reduce SPMD solution
+        logits = shard_activation(logits, "dp", None, "tp")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+        return tgt - lse
+
+    nb = -(-V // vocab_block)
+    Vp = nb * vocab_block
+    wp = jnp.pad(w, ((0, 0), (0, Vp - V)))
+
+    def body(carry, bi):
+        m, l, tgt = carry
+        blk = jax.lax.dynamic_slice(wp, (0, bi * vocab_block), (d, vocab_block))
+        logits = _softcap(
+            jnp.einsum("bsd,dv->bsv", hidden, blk.astype(hidden.dtype),
+                       preferred_element_type=jnp.float32), logit_softcap)
+        ids = bi * vocab_block + jnp.arange(vocab_block)
+        logits = jnp.where((ids < V)[None, None, :], logits, -jnp.inf)
+        m_new = jnp.maximum(m, logits.max(-1))
+        l = l * jnp.exp(m - m_new) + jnp.exp(logits - m_new[..., None]).sum(-1)
+        hit = (targets[..., None] == ids[None, None, :])
+        tgt = tgt + jnp.where(hit, logits, 0.0).sum(-1) * hit.any(-1)
+        return (m_new, l, tgt), None
+
+    m0 = jnp.full((B, S), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, S), jnp.float32)
+    t0 = jnp.zeros((B, S), jnp.float32)
+    (m, l, tgt), _ = jax.lax.scan(body, (m0, l0, t0), jnp.arange(nb))
+    return tgt - (m + jnp.log(l))

@@ -1,0 +1,25 @@
+"""Jit'd wrapper for the WKV6 kernel (model layout (B, S, H, hd))."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rwkv6_scan.rwkv6_scan import wkv6_bh
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6(r, k, v, w, u, state, *, chunk=128, interpret=None):
+    """r,k,v,w: (B, S, H, hd); u: (H, hd); state: (B, H, hd, hd).
+    Returns (y (B, S, H, hd), final_state) — drop-in for
+    repro.models.rwkv6.wkv6_scan."""
+    B, S, H, hd = r.shape
+    interp = (jax.default_backend() == "cpu") if interpret is None else interpret
+    to_bh = lambda a: a.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    ub = jnp.broadcast_to(u[None], (B, H, hd)).reshape(B * H, 1, hd)
+    s0 = state.reshape(B * H, hd, hd).astype(jnp.float32)
+    y, sf = wkv6_bh(to_bh(r), to_bh(k), to_bh(v), to_bh(w), ub, s0,
+                    chunk=chunk, interpret=interp)
+    y = y.reshape(B, H, S, hd).transpose(0, 2, 1, 3)
+    return y, sf.reshape(B, H, hd, hd)

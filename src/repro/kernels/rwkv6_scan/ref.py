@@ -1,0 +1,2 @@
+"""Oracle: re-export the model's sequential WKV6 scan."""
+from repro.models.rwkv6 import wkv6_scan  # noqa: F401

@@ -1,0 +1,21 @@
+"""Jit'd wrapper for the selective-scan kernel (model layout)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.ssm_scan.ssm_scan import selective_scan_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "chunk", "interpret"))
+def selective_scan(x, dt, A_log, Bc, Cc, D, state, *, block_d=256, chunk=128,
+                   interpret=None):
+    """Drop-in for repro.models.ssm.selective_scan (A passed as A_log)."""
+    interp = (jax.default_backend() == "cpu") if interpret is None else interpret
+    di = x.shape[-1]
+    bd = block_d
+    while di % bd != 0:           # shrink to a divisor (smoke configs)
+        bd //= 2
+    return selective_scan_kernel(x, dt, A_log, Bc, Cc, D, state,
+                                 block_d=bd, chunk=chunk, interpret=interp)

@@ -1,0 +1,2 @@
+"""Oracle: re-export the model's sequential selective scan."""
+from repro.models.ssm import selective_scan  # noqa: F401

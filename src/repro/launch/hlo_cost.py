@@ -1,0 +1,298 @@
+"""Trip-count-aware cost extraction from compiled (partitioned) HLO text.
+
+``compiled.cost_analysis()`` counts every while-loop body ONCE, which makes
+it useless for scan-over-layers programs (verified empirically: flops of a
+scanned matmul are independent of scan length). This walker re-derives
+per-device costs from ``compiled.as_text()``:
+
+* **flops** — 2 * prod(output) * prod(contracting dims) for every ``dot``
+  (convolutions are counted via output * window), accumulated recursively
+  through ``fusion``/``call``/``while`` with while bodies scaled by their
+  trip count (parsed from the loop-condition constant — JAX scans count
+  0..R with an ``i < R`` condition).
+* **bytes** — HBM-traffic proxy: operand + output bytes of top-level ops in
+  the entry/while-body computations (fusion internals are on-chip traffic
+  and are not counted), similarly trip-count scaled.
+* **collectives** — output bytes of all-gather / all-reduce /
+  reduce-scatter / all-to-all / collective-permute ops, per kind, scaled.
+
+All shapes in the partitioned module are per-device, so the returned costs
+are per-device quantities.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16}
+
+_SHAPE_RE = re.compile(r"([a-z]+[0-9]*[a-z0-9]*)\[([\d,]*)\]")
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s+\(.*\)\s+->\s+.+\{")
+# type part may be a tuple containing `/*index=N*/` comments (which contain
+# `=`); capture lazily up to the first `opcode(` token.
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s+=\s+(.*?)([\w\-]+)\(")
+_CALLS_RE = re.compile(r"calls=%?([\w\.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w\.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
+_OPERANDS_RE = re.compile(r"%([\w\.\-]+)")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# top-level op kinds whose operands/outputs count as HBM traffic. "while" is
+# skipped: its tuple operand is not HBM traffic per se — the body's per-trip
+# reads/writes are what count (and are scaled by trip count).
+_SKIP_BYTES = {"parameter", "constant", "tuple", "get-tuple-element",
+               "bitcast", "after-all", "iota", "while"}
+
+# pure-layout ops: real traffic in the CPU-scheduled HLO, but fused away by
+# the TPU backend — tracked separately so the roofline memory term can use
+# the TPU-faithful (excl-layout) number.
+_LAYOUT_OPS = {"copy", "transpose", "reshape", "convert", "broadcast",
+               "slice", "concatenate", "pad"}
+
+
+def _shape_dims(type_str: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for m in _SHAPE_RE.finditer(type_str):
+        dt = m.group(1)
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = [int(d) for d in m.group(2).split(",") if d]
+        out.append((dt, dims))
+    return out
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _shape_dims(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+class _Op:
+    __slots__ = ("name", "otype", "kind", "line")
+
+    def __init__(self, name, otype, kind, line):
+        self.name, self.otype, self.kind, self.line = name, otype, kind, line
+
+
+def _parse_computations(text: str) -> Dict[str, List[_Op]]:
+    comps: Dict[str, List[_Op]] = {}
+    entry = None
+    cur = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_HDR.match(line.strip())
+            if m and line.rstrip().endswith("{"):
+                cur = m.group(2)
+                comps[cur] = []
+                if m.group(1):
+                    entry = cur
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if m:
+            comps[cur].append(_Op(m.group(1), m.group(2), m.group(3), line))
+    comps["__entry__"] = entry
+    return comps
+
+
+def _trip_count(cond_ops: List[_Op]) -> int:
+    """Largest integer constant in the loop condition — JAX scans compare
+    the induction var against the length."""
+    best = 1
+    for op in cond_ops:
+        for m in re.finditer(r"constant\((\d+)\)", op.line):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def _dot_flops(op: _Op, symbols: Dict[str, str]) -> float:
+    out_dims = _shape_dims(op.otype)
+    out_n = 1
+    for _, dims in out_dims:
+        for d in dims:
+            out_n *= d
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.line)
+    contract = 1
+    if m:
+        # lhs operand = first %ref inside the parens
+        paren = op.line[op.line.index("(", op.line.index(op.kind)) + 1:]
+        refs = _OPERANDS_RE.findall(paren)
+        if refs and refs[0] in symbols:
+            shapes = _shape_dims(symbols[refs[0]])
+            if shapes:
+                dims = shapes[0][1]
+                for i in [int(x) for x in m.group(1).split(",") if x]:
+                    if i < len(dims):
+                        contract *= dims[i]
+    return 2.0 * out_n * contract
+
+
+def _conv_flops(op: _Op, symbols: Dict[str, str]) -> float:
+    n = 1
+    for _, dims in _shape_dims(op.otype):
+        for d in dims:
+            n *= d
+    m = re.search(r"window=\{size=([\dx]+)", op.line)
+    k = 1
+    if m:
+        for d in m.group(1).split("x"):
+            k *= int(d)
+    return 2.0 * n * k
+
+
+def _fusion_param_charges(callee_ops: List[_Op]):
+    """For a fusion's callee computation: per-parameter-index read bytes.
+    A parameter consumed ONLY by dynamic-slice ops is charged the slice
+    output size (the hardware reads the slice, not the buffer) — the crucial
+    correction for scan bodies, where XLA fuses the xs dynamic-slice into
+    the body fusion. Also returns the write charge: for a fusion rooted in
+    dynamic-update-slice the output is an aliased buffer and only the
+    update-slice is written."""
+    symbols = {op.name: op.otype for op in callee_ops}
+    param_idx = {}
+    for op in callee_ops:
+        if op.kind == "parameter":
+            m = re.search(r"parameter\((\d+)\)", op.line)
+            if m:
+                param_idx[op.name] = int(m.group(1))
+    reads: Dict[int, float] = {}
+    sliced: Dict[int, float] = {}
+    only_sliced: Dict[int, bool] = {i: True for i in param_idx.values()}
+    for op in callee_ops:
+        if op.kind == "parameter":
+            continue
+        paren_ix = op.line.find("(", op.line.find(op.kind))
+        refs = _OPERANDS_RE.findall(op.line[paren_ix:]) if paren_ix >= 0 else []
+        for r in refs:
+            if r in param_idx:
+                i = param_idx[r]
+                if op.kind == "dynamic-slice":
+                    sliced[i] = sliced.get(i, 0.0) + _shape_bytes(op.otype)
+                else:
+                    only_sliced[i] = False
+    for name, i in param_idx.items():
+        full = _shape_bytes(symbols[name])
+        reads[i] = sliced.get(i, full) if only_sliced.get(i, False) and i in sliced else full
+    # write charge
+    write = None
+    dus_bufs = set()
+    for op in callee_ops:
+        if op.kind == "dynamic-update-slice":
+            paren_ix = op.line.find("(", op.line.find(op.kind))
+            refs = _OPERANDS_RE.findall(op.line[paren_ix:])
+            if len(refs) >= 2 and refs[1] in symbols:
+                write = (write or 0.0) + _shape_bytes(symbols[refs[1]])
+            if refs and refs[0] in param_idx:
+                dus_bufs.add(param_idx[refs[0]])
+    for i in dus_bufs:        # aliased buffer: not read in full either
+        reads[i] = 0.0
+    return reads, write
+
+
+def _op_bytes(op: _Op, operands, symbols, comps) -> float:
+    """HBM-traffic estimate for one top-level op (reads + writes)."""
+    out_b = _shape_bytes(op.otype)
+    kind = op.kind
+    if kind == "fusion":
+        m = _CALLS_RE.search(op.line)
+        callee = comps.get(m.group(1)) if m else None
+        if callee:
+            reads, write = _fusion_param_charges(callee)
+            b = (write if write is not None else out_b)
+            for pos, ref in enumerate(operands):
+                b += reads.get(pos, _shape_bytes(symbols[ref]))
+            return b
+    if kind in ("dynamic-slice", "gather"):
+        return 2.0 * out_b
+    if kind == "dynamic-update-slice" and len(operands) >= 2:
+        return 2.0 * _shape_bytes(symbols[operands[1]])
+    if kind == "scatter" and len(operands) >= 3:
+        return (2.0 * _shape_bytes(symbols[operands[2]])
+                + _shape_bytes(symbols[operands[1]]))
+    b = out_b
+    for ref in operands:
+        b += _shape_bytes(symbols[ref])
+    return b
+
+
+def parse_hlo_cost(text: str) -> dict:
+    comps = _parse_computations(text)
+    entry = comps.pop("__entry__")
+    memo: Dict[str, dict] = {}
+
+    def cost_of(cname: str) -> dict:
+        if cname in memo:
+            return memo[cname]
+        memo[cname] = {"flops": 0.0, "bytes": 0.0, "layout_bytes": 0.0,
+                       "coll": {k: 0.0 for k in COLLECTIVES}}
+        ops = comps.get(cname, [])
+        symbols = {op.name: op.otype for op in ops}
+        c = memo[cname]
+        for op in ops:
+            kind = op.kind
+            if kind == "dot":
+                c["flops"] += _dot_flops(op, symbols)
+            elif kind == "convolution":
+                c["flops"] += _conv_flops(op, symbols)
+            if kind == "while":
+                body = _BODY_RE.search(op.line)
+                cond = _COND_RE.search(op.line)
+                trips = _trip_count(comps.get(cond.group(1), [])) if cond else 1
+                if body:
+                    sub = cost_of(body.group(1))
+                    c["flops"] += trips * sub["flops"]
+                    c["bytes"] += trips * sub["bytes"]
+                    c["layout_bytes"] += trips * sub["layout_bytes"]
+                    for k in COLLECTIVES:
+                        c["coll"][k] += trips * sub["coll"][k]
+                continue
+            if kind in ("fusion", "call", "custom-call", "conditional"):
+                # flops live inside the callee; bytes are the op's own I/O
+                m = _CALLS_RE.search(op.line)
+                branches = ([m.group(1)] if m else
+                            re.findall(r"branch_computations=\{([^}]*)\}",
+                                       op.line))
+                names = []
+                for b in branches:
+                    names.extend(x.strip().lstrip("%") for x in b.split(","))
+                for nm in names:
+                    if nm in comps:
+                        sub = cost_of(nm)
+                        c["flops"] += sub["flops"]
+                        for k in COLLECTIVES:
+                            c["coll"][k] += sub["coll"][k]
+            base = kind.replace("-start", "").replace("-done", "")
+            if base in COLLECTIVES and not kind.endswith("-done"):
+                c["coll"][base] += _shape_bytes(op.otype)
+            # bytes: top-level I/O
+            if kind not in _SKIP_BYTES and not kind.endswith("-done"):
+                paren_ix = op.line.find("(", op.line.find(op.kind))
+                operands = []
+                if paren_ix >= 0:
+                    operands = [r for r in
+                                _OPERANDS_RE.findall(op.line[paren_ix:])
+                                if r in symbols]
+                b = _op_bytes(op, operands, symbols, comps)
+                if kind in _LAYOUT_OPS:
+                    c["layout_bytes"] += b
+                else:
+                    c["bytes"] += b
+        return c
+
+    # only count the entry; fusion-callee computations are reached via calls
+    total = cost_of(entry) if entry else {"flops": 0, "bytes": 0,
+                                          "layout_bytes": 0, "coll": {}}
+    coll = dict(total["coll"])
+    coll["total"] = sum(coll.values())
+    return {"flops": total["flops"], "bytes": total["bytes"],
+            "layout_bytes": total["layout_bytes"], "collectives": coll}

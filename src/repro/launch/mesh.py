@@ -1,0 +1,40 @@
+"""Production mesh construction.
+
+Called as a FUNCTION so importing this module never touches jax device
+state. The dry-run sets XLA_FLAGS=--xla_force_host_platform_device_count=512
+before any jax import; smoke tests and benches see the real single device.
+"""
+from __future__ import annotations
+
+import jax
+
+# TPU v5e hardware constants used by the roofline analysis (benchmarks/).
+PEAK_FLOPS_BF16 = 197e12          # per chip
+HBM_BW = 819e9                    # bytes/s per chip
+ICI_BW = 50e9                     # bytes/s per link
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_gqa_serve_mesh(*, data: int = 4, kv_groups: int = 8,
+                        within: int = 8):
+    """Serve-optimised 3D view of the same 256 chips for GQA models whose
+    kv-head count doesn't divide a flat TP axis: attention projections and
+    the KV cache's head dim shard over "kvg" (= num_kv_heads), the cache
+    LENGTH and the MLP's second factor shard over "model", batch over
+    "data". See EXPERIMENTS.md §Perf hillclimb C."""
+    return jax.make_mesh((data, kv_groups, within), ("data", "kvg", "model"))
+
+
+def make_cpu_mesh():
+    """Single-device mesh with the same axis names (CPU tests)."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def data_axes(mesh) -> tuple:
+    """The axes a global batch shards over."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)

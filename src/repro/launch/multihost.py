@@ -1,0 +1,114 @@
+"""Multi-host pod launcher — the deployment entry point for real TPU slices.
+
+One process per host; `jax.distributed.initialize` wires the pod(s); the
+production mesh is built over the global device set and the CoPRIS step
+functions are pjit'd with the same sharding rules the dry-run validated.
+
+    # on every host of a v5e-256 slice (single pod):
+    python -m repro.launch.multihost --arch llama3.2-1b --steps 1000
+
+    # two slices (multi-pod, 512 chips): same command with
+    # --multi-pod and the usual JAX_COORDINATOR_ADDRESS / megascale env.
+
+This module cannot execute in the CPU container (1 device); it is
+import-safe and covered by tests/test_multihost.py up to the
+device-count guard, and shares 100% of its model/step/sharding code with
+the dry-run, which *does* compile the full mesh here.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+import jax
+import numpy as np
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--steps", type=int, default=1000)
+    ap.add_argument("--coordinator", default=None,
+                    help="host:port for jax.distributed (defaults to env)")
+    ap.add_argument("--num-processes", type=int, default=None)
+    ap.add_argument("--process-id", type=int, default=None)
+    ap.add_argument("--dry", action="store_true",
+                    help="lower+compile only (per-host dry run)")
+    args = ap.parse_args(argv)
+
+    # -- distributed init ------------------------------------------------
+    if args.coordinator or args.num_processes:
+        jax.distributed.initialize(coordinator_address=args.coordinator,
+                                   num_processes=args.num_processes,
+                                   process_id=args.process_id)
+    else:
+        try:
+            jax.distributed.initialize()     # TPU pod: auto-detect
+        except Exception:
+            pass                              # single-process fallback
+
+    want = 512 if args.multi_pod else 256
+    have = jax.device_count()
+    if have < want:
+        print(f"multihost launcher needs {want} devices, found {have}; "
+              f"use launch/dryrun.py for the host-device simulation.",
+              file=sys.stderr)
+        return 2
+
+    from repro.common.config import INPUT_SHAPES, TrainConfig
+    from repro.common.partitioning import set_activation_mesh
+    from repro.configs import get_config
+    from repro.core.copris import make_train_step
+    from repro.launch import sharding as shd
+    from repro.launch.dryrun import input_specs
+    from repro.launch.mesh import make_production_mesh
+    from repro.models import model as M
+    from repro.optim import adam
+
+    cfg = get_config(args.arch)
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    set_activation_mesh(mesh)
+    step, specs, in_sh, donate, meta = input_specs(
+        cfg, INPUT_SHAPES["train_4k"], mesh)
+
+    with mesh:
+        jitted = jax.jit(step, in_shardings=in_sh, donate_argnums=donate)
+        lowered = jitted.lower(*specs)
+        compiled = lowered.compile()
+        if jax.process_index() == 0:
+            print(compiled.memory_analysis())
+        if args.dry:
+            return 0
+
+        # materialise sharded state and run the training loop
+        p_sh, o_sh, b_sh, _ = in_sh
+        params = jax.jit(lambda k: M.init_params(k, cfg),
+                         out_shardings=p_sh)(jax.random.PRNGKey(0))
+        opt = jax.jit(adam.init, out_shardings=o_sh)(params)
+        rng = np.random.default_rng(0)
+        for i in range(args.steps):
+            # the rollout engine feeds this batch in the integrated system;
+            # here the launcher demonstrates the update path end-to-end
+            B, S = 256, 4096
+            batch = {
+                "tokens": jax.device_put(
+                    rng.integers(0, cfg.vocab_size, (B, S)).astype(np.int32),
+                    b_sh["tokens"]),
+                "response_mask": jax.device_put(
+                    np.ones((B, S), np.float32), b_sh["response_mask"]),
+                "behaviour_logp": jax.device_put(
+                    np.zeros((B, S), np.float32), b_sh["behaviour_logp"]),
+                "advantages": jax.device_put(
+                    rng.normal(size=(B,)).astype(np.float32),
+                    b_sh["advantages"]),
+            }
+            params, opt, metrics = jitted(params, opt, batch,
+                                          jax.numpy.asarray(1e-6))
+            if jax.process_index() == 0 and i % 10 == 0:
+                print(f"step {i}: loss {float(metrics['pg_loss']):.4f}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

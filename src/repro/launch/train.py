@@ -1,0 +1,105 @@
+"""RL training launcher (live hardware — CPU-scale here, same code path on
+a real cluster once params/opt are sharded with launch/sharding rules).
+
+    PYTHONPATH=src python -m repro.launch.train \
+        --arch tiny --mode copris --steps 200 --concurrency 16 \
+        --sft-warmup 150 --out runs/tiny_copris
+
+Writes metrics.jsonl per step and checkpoints every --ckpt-every steps.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import numpy as np
+
+from repro.checkpoint import ckpt
+from repro.common.config import RolloutConfig, TrainConfig
+from repro.configs import get_config, get_smoke_config
+from repro.core.copris import CoPRISTrainer
+from repro.data.sft import sft_warmup
+from repro.data.tasks import AdditionTask, EOS
+from repro.models import model as M
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tiny")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced variant of --arch")
+    ap.add_argument("--mode", default="copris",
+                    choices=["copris", "sync", "naive_partial"])
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch-size", type=int, default=8)
+    ap.add_argument("--group-size", type=int, default=4)
+    ap.add_argument("--concurrency", type=int, default=16)
+    ap.add_argument("--max-response", type=int, default=24)
+    ap.add_argument("--lr", type=float, default=2e-4)
+    ap.add_argument("--no-is", action="store_true",
+                    help="disable cross-stage IS correction (ablation)")
+    ap.add_argument("--sft-warmup", type=int, default=150)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="runs/default")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", default=None)
+    ap.add_argument("--eval-every", type=int, default=25)
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    task = AdditionTask(max_value=20, seed=args.seed)
+    os.makedirs(args.out, exist_ok=True)
+
+    params = None
+    if args.resume:
+        state = ckpt.load(args.resume)
+        params = state["params"]
+        print(f"resumed from {args.resume}")
+    elif args.sft_warmup > 0:
+        params = M.init_params(jax.random.PRNGKey(args.seed), cfg)
+        print(f"SFT warmup {args.sft_warmup} steps…")
+        params, loss = sft_warmup(params, cfg, task, steps=args.sft_warmup,
+                                  log_every=50)
+        print(f"  warmup done (loss {loss:.3f})")
+
+    ro = RolloutConfig(batch_size=args.batch_size, group_size=args.group_size,
+                       max_prompt_len=16, max_response_len=args.max_response,
+                       concurrency=args.concurrency, mode=args.mode)
+    tc = TrainConfig(lr=args.lr, warmup_steps=5, total_steps=args.steps,
+                     use_is_correction=not args.no_is, seed=args.seed)
+    tr = CoPRISTrainer(cfg, ro, tc, task, eos_id=EOS, params=params)
+    if args.resume:
+        tr.opt_state = state["opt_state"]
+        tr.stage = state["stage"]
+
+    mpath = os.path.join(args.out, "metrics.jsonl")
+    with open(mpath, "a") as mf:
+        for i in range(args.steps):
+            out = tr.step()
+            mf.write(json.dumps(out) + "\n")
+            mf.flush()
+            if i % 5 == 0:
+                print(f"step {out['step']:4d} reward={out['reward_mean']:.3f} "
+                      f"loss={out['pg_loss']:+.4f} ratio={out['ratio_mean']:.3f} "
+                      f"off={out['off_policy_frac']:.2f} "
+                      f"t={out['step_time']:.1f}s")
+            if args.eval_every and (i + 1) % args.eval_every == 0:
+                from repro.eval.passk import evaluate as eval_passk
+                acc = tr.evaluate(n_prompts=16)
+                pk = eval_passk(tr.params, cfg, task, eos_id=EOS,
+                                n_prompts=8, samples_per_prompt=8,
+                                max_response=args.max_response, ks=(1, 8))
+                print(f"  eval@{out['step']}: greedy {acc:.3f} "
+                      f"pass@1 {pk['pass@1']:.3f} pass@8 {pk['pass@8']:.3f}")
+            if (i + 1) % args.ckpt_every == 0:
+                p = os.path.join(args.out, f"ckpt_{tr.stage}.zpkl")
+                ckpt.save(p, {"params": tr.params, "opt_state": tr.opt_state,
+                              "stage": tr.stage})
+                print(f"  saved {p}")
+    print("final eval:", tr.evaluate(n_prompts=32))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""Shared building blocks: initializers, RMSNorm, RoPE, gated MLP."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape, dtype, *, fan_in: int | None = None):
+    """Truncated-normal init with 1/sqrt(fan_in) scale (megatron-style)."""
+    fan = fan_in if fan_in is not None else shape[-2] if len(shape) >= 2 else shape[-1]
+    std = 1.0 / np.sqrt(fan)
+    return (jax.random.truncated_normal(key, -3.0, 3.0, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+def split_keys(key, n):
+    return list(jax.random.split(key, n))
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, scale, *, eps: float = 1e-6, offset: float = 0.0):
+    """RMSNorm; gemma-style uses offset=1.0 with zero-init scale."""
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * (scale.astype(jnp.float32) + offset)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float):
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, hd); positions: (..., S) int32. Rotates pairs
+    (x[..., :hd/2], x[..., hd/2:]) — llama convention."""
+    hd = x.shape[-1]
+    inv = jnp.asarray(rope_frequencies(hd, theta))          # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv    # (..., S, hd/2)
+    sin = jnp.sin(ang)[..., None, :]                        # (..., S, 1, hd/2)
+    cos = jnp.cos(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (SwiGLU)
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, d_model, d_ff, dtype):
+    k1, k2, k3 = split_keys(key, 3)
+    return {
+        "wi": dense_init(k1, (d_model, d_ff), dtype),
+        "wg": dense_init(k2, (d_model, d_ff), dtype),
+        "wo": dense_init(k3, (d_ff, d_model), dtype),
+    }
+
+
+def apply_mlp(params, x, *, activation: str = "silu"):
+    act = jax.nn.silu if activation == "silu" else jax.nn.gelu
+    h = act(x @ params["wg"].astype(x.dtype)) * (x @ params["wi"].astype(x.dtype))
+    return h @ params["wo"].astype(x.dtype)
+
+
+def softcap(x, cap: float):
+    """tanh soft-capping (gemma2)."""
+    if cap and cap > 0.0:
+        return jnp.tanh(x / cap) * cap
+    return x

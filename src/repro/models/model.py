@@ -1,0 +1,182 @@
+"""LM wrapper: embeddings → block stack → final norm → logits.
+
+Public entry points (all pure functions over a params pytree):
+
+* ``init_params(key, cfg)``
+* ``forward_train(params, cfg, tokens, ...)`` — full-sequence logits (+aux)
+* ``score_logprobs(params, cfg, tokens, ...)`` — per-token log p(token) under
+  the current policy (the IS-recompute pass; uses the fused vocab-blocked
+  path to avoid materialising (B, S, V) probabilities)
+* ``prefill(params, cfg, tokens, lengths, cache, ...)`` — seed the slot cache,
+  return last-valid-position logits
+* ``decode_step(params, cfg, token, cache, cache_len, ...)`` — one token
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import ModelConfig
+from repro.models import transformer
+from repro.models.layers import embed_init, dense_init, rms_norm, softcap
+from repro.models.transformer import _gather_last
+
+
+def init_params(key, cfg: ModelConfig):
+    dtype = jnp.dtype(cfg.param_dtype)
+    k_e, k_s, k_h, k_m = jax.random.split(key, 4)
+    params = {
+        "embed": {"tok": embed_init(k_e, (cfg.vocab_size, cfg.d_model), dtype)},
+        "stack": transformer.init_stack(k_s, cfg, dtype),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(k_h, (cfg.d_model, cfg.vocab_size), dtype)
+    if cfg.uses_media:
+        params["embed"]["media_proj"] = dense_init(
+            k_m, (cfg.cross_attn.d_media, cfg.d_model), dtype)
+    return params
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    return transformer.init_stack_cache(cfg, batch, max_len, dtype)
+
+
+# ---------------------------------------------------------------------------
+
+
+def _embed(params, cfg: ModelConfig, tokens):
+    dt = jnp.dtype(cfg.dtype)
+    tab = params["embed"]["tok"]
+    if cfg.embed_impl == "onehot":
+        # one-hot matmul: SPMD partitions this like any other matmul
+        # (vocab-parallel embedding without gather rematerialization)
+        oh = jax.nn.one_hot(tokens, cfg.vocab_size, dtype=dt)
+        x = oh @ tab.astype(dt)
+    else:
+        x = tab[tokens].astype(dt)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, dt)
+    return x
+
+
+def _project_media(params, cfg: ModelConfig, media, *, mode="train"):
+    if media is None and cfg.uses_media and mode != "decode":
+        # decode reads the cached media K/V (hillclimb C); other modes
+        # require the (stubbed) frontend embeddings
+        raise ValueError(f"{cfg.name} requires media embeddings")
+    if media is None:
+        return None
+    return media.astype(jnp.dtype(cfg.dtype)) @ params["embed"]["media_proj"].astype(
+        jnp.dtype(cfg.dtype))
+
+
+def _logits(params, cfg: ModelConfig, x):
+    w = (params["embed"]["tok"].T if cfg.tie_embeddings else params["lm_head"])
+    out = x @ w.astype(x.dtype)
+    out = out.astype(jnp.float32)
+    if cfg.logit_softcap > 0.0:
+        out = softcap(out, cfg.logit_softcap)
+    return out
+
+
+def backbone(params, cfg: ModelConfig, tokens, *, positions=None, media=None,
+             cache=None, cache_len=None, seq_mask=None, lengths=None,
+             mode="train", use_pallas=False, remat=False):
+    """Embed + stack + final norm. Returns (hidden (B,S,d), new_cache, aux)."""
+    B, S = tokens.shape
+    if positions is None:
+        if mode == "decode":
+            positions = cache_len[:, None]
+        else:
+            positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    x = _embed(params, cfg, tokens)
+    if mode != "decode":
+        from repro.common.partitioning import shard_activation
+        x = shard_activation(x, "dp", None, None)
+    media_p = _project_media(params, cfg, media, mode=mode)
+    x, new_cache, aux = transformer.apply_stack(
+        params["stack"], cfg, x, positions=positions, media=media_p,
+        cache=cache, cache_len=cache_len, seq_mask=seq_mask, lengths=lengths,
+        mode=mode, use_pallas=use_pallas, remat=remat)
+    x = rms_norm(x, params["final_norm"], eps=cfg.rms_eps)
+    return x, new_cache, aux
+
+
+# -- training ---------------------------------------------------------------
+
+
+def forward_train(params, cfg: ModelConfig, tokens, *, media=None,
+                  seq_mask=None, use_pallas=False, remat=True):
+    """Full logits (B, S, V) fp32 + aux dict."""
+    x, _, aux = backbone(params, cfg, tokens, media=media, seq_mask=seq_mask,
+                         mode="train", use_pallas=use_pallas, remat=remat)
+    return _logits(params, cfg, x), {"router_aux": aux}
+
+
+def token_logprobs_from_logits(logits, targets):
+    """logits: (B, S, V) fp32; targets: (B, S) — log p(targets)."""
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    tgt = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return tgt - lse
+
+
+def score_logprobs(params, cfg: ModelConfig, tokens, targets, *, media=None,
+                   seq_mask=None, use_pallas=False, remat=True,
+                   vocab_block: int = 0):
+    """Per-token log-prob of ``targets`` given ``tokens`` (same length,
+    targets[t] is the next-token label for position t). Memory-safe for huge
+    vocabularies via the fused vocab-blocked gather-logsumexp path.
+    Returns (logps (B, S) fp32, aux)."""
+    x, _, aux = backbone(params, cfg, tokens, media=media, seq_mask=seq_mask,
+                         mode="train", use_pallas=use_pallas, remat=remat)
+    w = (params["embed"]["tok"].T if cfg.tie_embeddings else params["lm_head"])
+    if use_pallas:
+        from repro.kernels.fused_logprob import ops as flp_ops
+        lp = flp_ops.fused_logprob(x, w, targets, logit_softcap=cfg.logit_softcap)
+    else:
+        from repro.kernels.fused_logprob import ref as flp_ref
+        lp = flp_ref.fused_logprob(x, w, targets, logit_softcap=cfg.logit_softcap,
+                                   vocab_block=vocab_block)
+    return lp, {"router_aux": aux}
+
+
+# -- serving ----------------------------------------------------------------
+
+
+def prefill(params, cfg: ModelConfig, tokens, lengths, cache, *, media=None,
+            use_pallas=False, return_logprobs=False):
+    """Seed the cache with (right-padded) prompts.
+
+    tokens: (B, S) right-padded; lengths: (B,) true lengths.
+    Returns (next_token_logits (B, V), new_cache) —
+    or (logits, new_cache, logps (B, S)) when ``return_logprobs`` (the
+    behaviour-logprob record for re-prefilled resumed tokens is *not* taken
+    from here; behaviour logps are recorded at sampling time).
+    """
+    B, S = tokens.shape
+    seq_mask = (jnp.arange(S)[None, :] < lengths[:, None])
+    x, new_cache, _ = backbone(params, cfg, tokens, cache=cache, media=media,
+                               seq_mask=seq_mask, lengths=lengths,
+                               mode="prefill", use_pallas=use_pallas)
+    last = _gather_last(x, lengths)                     # (B, d)
+    logits = _logits(params, cfg, last[:, None, :])[:, 0]
+    if return_logprobs:
+        full = _logits(params, cfg, x)
+        lp = token_logprobs_from_logits(full[:, :-1], tokens[:, 1:])
+        return logits, new_cache, lp
+    return logits, new_cache
+
+
+def decode_step(params, cfg: ModelConfig, token, cache, cache_len, *,
+                media=None, use_pallas=False):
+    """token: (B,) int32 — the *input* token; returns logits (B, V) for the
+    next token plus the updated cache (token's K/V written at cache_len)."""
+    x, new_cache, _ = backbone(params, cfg, token[:, None], cache=cache,
+                               cache_len=cache_len, media=media,
+                               mode="decode", use_pallas=use_pallas)
+    logits = _logits(params, cfg, x)[:, 0]
+    return logits, new_cache

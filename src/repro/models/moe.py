@@ -1,0 +1,155 @@
+"""Mixture-of-Experts FFN: top-k router + shared experts.
+
+Dispatch is a dense one-hot einsum over the expert dimension — under pjit
+with experts sharded on the "model" axis XLA lowers this to the expert-
+parallel all-to-all / all-reduce pattern. Router runs in fp32 and produces a
+load-balance auxiliary loss (Switch-style), surfaced through the model's
+aux-dict so the trainer can add ``router_aux_coef`` * aux.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, split_keys
+
+
+def init_moe(key, cfg, dtype):
+    m = cfg.moe
+    d = cfg.d_model
+    ks = split_keys(key, 7)
+    p = {
+        "router": dense_init(ks[0], (d, m.num_experts), jnp.float32),
+        "wi": dense_init(ks[1], (m.num_experts, d, m.d_expert), dtype, fan_in=d),
+        "wg": dense_init(ks[2], (m.num_experts, d, m.d_expert), dtype, fan_in=d),
+        "wo": dense_init(ks[3], (m.num_experts, m.d_expert, d), dtype, fan_in=m.d_expert),
+    }
+    if m.num_shared_experts > 0:
+        ds = m.d_shared * m.num_shared_experts
+        p["shared"] = {
+            "wi": dense_init(ks[4], (d, ds), dtype),
+            "wg": dense_init(ks[5], (d, ds), dtype),
+            "wo": dense_init(ks[6], (ds, d), dtype, fan_in=ds),
+        }
+    return p
+
+
+def apply_moe(params, cfg, x):
+    """x: (B, S, d) -> (out, aux_loss).
+
+    Dense dispatch: every token's hidden state is routed via a (tokens, E)
+    combine-weight matrix that is zero outside its top-k experts. FLOP-exact
+    for roofline accounting this is E-dense; XLA's SPMD partitioner turns the
+    expert-dim einsums into all-to-all when experts are sharded.
+    """
+    m = cfg.moe
+    dt = x.dtype
+    B, S, d = x.shape
+    xt = x.reshape(B * S, d)
+
+    logits = (xt.astype(jnp.float32) @ params["router"])          # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_i = jax.lax.top_k(probs, m.top_k)                   # (T, k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    # combine weights as a dense (T, E) matrix
+    onehot = jax.nn.one_hot(top_i, m.num_experts, dtype=jnp.float32)  # (T,k,E)
+    combine = jnp.einsum("tk,tke->te", top_w, onehot)              # (T, E)
+
+    # load-balance aux loss (Switch): E * sum_e f_e * p_e
+    frac_tokens = onehot.sum(1).mean(0)                            # (E,)
+    frac_probs = probs.mean(0)
+    aux = m.num_experts * jnp.sum(frac_tokens * frac_probs)
+
+    # expert computation, dense over E (sharded over "model" axis under pjit)
+    h_g = jnp.einsum("td,edf->tef", xt, params["wg"].astype(dt))
+    h_i = jnp.einsum("td,edf->tef", xt, params["wi"].astype(dt))
+    h = jax.nn.silu(h_g) * h_i                                     # (T, E, f)
+    y_e = jnp.einsum("tef,efd->ted", h, params["wo"].astype(dt))   # (T, E, d)
+    y = jnp.einsum("ted,te->td", y_e, combine.astype(dt))
+
+    if "shared" in params:
+        s = params["shared"]
+        hs = jax.nn.silu(xt @ s["wg"].astype(dt)) * (xt @ s["wi"].astype(dt))
+        y = y + hs @ s["wo"].astype(dt)
+
+    return y.reshape(B, S, d), aux
+
+
+def apply_moe_sparse(params, cfg, x, *, capacity_factor: float | None = None,
+                     dispatch_chunk: int = 65536):
+    """Capacity-bounded gather/scatter dispatch (the FLOP-efficient path).
+
+    Tokens beyond an expert's capacity are dropped (their residual passes
+    through). Used by the optimized train path; `apply_moe` remains the
+    dense reference.
+
+    ``dispatch_chunk`` can chunk the dispatch over token blocks; both the
+    chunked variant and explicit expert-sharding constraints were tried for
+    the qwen3-moe train_4k memory blowup and REFUTED (EXPERIMENTS.md §Perf,
+    hillclimb D — chunking multiplied SPMD's buffer replication by the
+    chunk count; constraints forced 5x redundant compute). Default is one
+    global dispatch; the production fix is a shard_map ragged all-to-all
+    dispatch (documented future work).
+    """
+    m = cfg.moe
+    dt = x.dtype
+    B, S, d = x.shape
+    T = B * S
+    cf = capacity_factor if capacity_factor is not None else m.capacity_factor
+
+    chunk = min(dispatch_chunk, T)
+    while T % chunk != 0:
+        chunk //= 2
+    cap = max(1, int(cf * chunk * m.top_k / m.num_experts))
+    xt = x.reshape(T, d)
+
+    def one_chunk(xc):
+        """xc: (chunk, d) -> (y (chunk, d), aux scalar)."""
+        logits = xc.astype(jnp.float32) @ params["router"]
+        probs = jax.nn.softmax(logits, axis=-1)
+        top_w, top_i = jax.lax.top_k(probs, m.top_k)
+        top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+        onehot = jax.nn.one_hot(top_i, m.num_experts, dtype=jnp.float32)
+        frac_tokens = onehot.sum(1).mean(0)
+        aux = m.num_experts * jnp.sum(frac_tokens * probs.mean(0))
+
+        flat_e = top_i.reshape(-1)                             # (chunk*k,)
+        pos_in_e = jnp.cumsum(
+            jax.nn.one_hot(flat_e, m.num_experts, dtype=jnp.int32), axis=0)
+        pos = (jnp.take_along_axis(pos_in_e, flat_e[:, None], axis=1)
+               .squeeze(-1) - 1)
+        keep = pos < cap
+        slot = jnp.where(keep, flat_e * cap + pos, m.num_experts * cap)
+
+        buf = jnp.zeros((m.num_experts * cap + 1, d), dt)
+        tok_idx = jnp.repeat(jnp.arange(chunk), m.top_k)
+        buf = buf.at[slot].set(xc[tok_idx])
+        xe = buf[: m.num_experts * cap].reshape(m.num_experts, cap, d)
+
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe,
+                                   params["wg"].astype(dt))) \
+            * jnp.einsum("ecd,edf->ecf", xe, params["wi"].astype(dt))
+        ye = jnp.einsum("ecf,efd->ecd", h, params["wo"].astype(dt))
+
+        flat_w = jnp.where(keep, top_w.reshape(-1), 0.0)
+        y = jnp.zeros((chunk, d), dt)
+        sel = ye.reshape(-1, d)[jnp.minimum(slot, m.num_experts * cap - 1)]
+        y = y.at[tok_idx].add(sel * flat_w[:, None].astype(dt)
+                              * keep[:, None].astype(dt))
+        return y, aux
+
+    if chunk == T:
+        y, aux = one_chunk(xt)
+    else:
+        xs = xt.reshape(T // chunk, chunk, d)
+        y, auxs = jax.lax.map(one_chunk, xs)
+        y = y.reshape(T, d)
+        aux = auxs.mean()
+
+    if "shared" in params:
+        s = params["shared"]
+        hs = jax.nn.silu(xt @ s["wg"].astype(dt)) * (xt @ s["wi"].astype(dt))
+        y = y + hs @ s["wo"].astype(dt)
+    return y.reshape(B, S, d), aux

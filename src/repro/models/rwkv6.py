@@ -1,0 +1,155 @@
+"""RWKV6 ("Finch") block: data-dependent-decay time-mix + channel-mix.
+
+Attention-free: per-head matrix-valued state S ∈ (hd, hd) evolves as
+
+    S_t = diag(w_t) · S_{t-1} + k_tᵀ · v_t
+    y_t = r_t · (diag(u) · k_tᵀ v_t + S_{t-1})
+
+with data-dependent decay w_t = exp(-exp(wd_t)) produced by a LoRA on the
+token-shifted input. Decode state per slot is (heads, hd, hd) + two
+token-shift vectors — O(d²/heads) instead of O(L·d): partial-rollout
+resumption is *cheaper* than for attention archs (see DESIGN.md §4).
+
+The sequential scan here is the reference semantics for the chunked Pallas
+kernel in kernels/rwkv6_scan.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, split_keys
+
+
+def init_rwkv_block(key, cfg, dtype):
+    d = cfg.d_model
+    r = cfg.rwkv
+    H = d // r.head_dim
+    ks = split_keys(key, 14)
+    tm = {
+        # token-shift base mixing coefficients for r,k,v,g,w
+        "mu": 0.5 * jnp.ones((5, d), dtype),
+        # data-dependent mixing LoRA: x -> 5 deltas
+        "mix_a": dense_init(ks[0], (d, r.mix_lora * 5), dtype),
+        "mix_b": dense_init(ks[1], (5, r.mix_lora, d), dtype, fan_in=r.mix_lora),
+        "wr": dense_init(ks[2], (d, d), dtype),
+        "wk": dense_init(ks[3], (d, d), dtype),
+        "wv": dense_init(ks[4], (d, d), dtype),
+        "wg": dense_init(ks[5], (d, d), dtype),
+        "wo": dense_init(ks[6], (d, d), dtype),
+        # decay: base + LoRA(data-dependent part) — the Finch novelty
+        "w_base": jnp.zeros((d,), dtype) - 6.0,
+        "dec_a": dense_init(ks[7], (d, r.decay_lora), dtype),
+        "dec_b": dense_init(ks[8], (r.decay_lora, d), dtype, fan_in=r.decay_lora),
+        "u": dense_init(ks[9], (H, r.head_dim), dtype),   # "time_faaaa" bonus
+        "ln_x": jnp.ones((d,), dtype),                     # per-head groupnorm scale
+    }
+    cm = {
+        "mu_k": 0.5 * jnp.ones((d,), dtype),
+        "mu_r": 0.5 * jnp.ones((d,), dtype),
+        "wk": dense_init(ks[10], (d, cfg.d_ff), dtype),
+        "wv": dense_init(ks[11], (cfg.d_ff, d), dtype),
+        "wr": dense_init(ks[12], (d, d), dtype),
+    }
+    return {"tm": tm, "cm": cm}
+
+
+def _token_shift(x, prev):
+    """x: (B, S, d); prev: (B, d) last token of previous chunk. Returns the
+    one-step-shifted sequence and the new carry (last token of x)."""
+    shifted = jnp.concatenate([prev[:, None, :], x[:, :-1, :]], axis=1)
+    return shifted, x[:, -1, :]
+
+
+def wkv6_scan(r, k, v, w, u, state, seq_mask=None):
+    """Sequential WKV6 recurrence (reference for the Pallas kernel).
+
+    r,k,v: (B, S, H, hd); w: (B, S, H, hd) decay in (0,1); u: (H, hd);
+    state: (B, H, hd, hd). ``seq_mask`` (B, S) freezes the state across
+    right-pads (w -> 1, k -> 0). Returns y (B, S, H, hd) and final state.
+    All in fp32 internally.
+    """
+    dt = r.dtype
+    r, k, v, w = (a.astype(jnp.float32) for a in (r, k, v, w))
+    u = u.astype(jnp.float32)
+    state = state.astype(jnp.float32)
+    if seq_mask is not None:
+        m = seq_mask[:, :, None, None].astype(jnp.float32)
+        k = k * m
+        w = w * m + (1.0 - m)
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp                          # (B, H, hd)
+        kv = kt[..., :, None] * vt[..., None, :]      # (B, H, hd, hd)
+        y = jnp.einsum("bhk,bhkv->bhv", rt, s + u[None, :, :, None] * kv)
+        s = wt[..., :, None] * s + kv
+        return s, y
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (r, k, v, w))
+    state, ys = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(dt), state
+
+
+def apply_time_mix(tm, cfg, x, prev_x, state, *, seq_mask=None,
+                   use_pallas: bool = False):
+    """x: (B, S, d). Returns (out, new_prev_x, new_state)."""
+    r_cfg = cfg.rwkv
+    hd = r_cfg.head_dim
+    d = cfg.d_model
+    H = d // hd
+    dt = x.dtype
+    B, S, _ = x.shape
+
+    shifted, new_prev = _token_shift(x, prev_x)
+    delta = shifted - x                                # (B, S, d)
+    # data-dependent mixing: mu_t = mu + tanh(x @ A) @ B  (per r/k/v/g/w)
+    lo = jnp.tanh(x @ tm["mix_a"].astype(dt))          # (B, S, 5*rank)
+    lo = lo.reshape(B, S, 5, r_cfg.mix_lora)
+    dyn = jnp.einsum("bsfr,frd->bsfd", lo, tm["mix_b"].astype(dt))
+    mix = tm["mu"].astype(dt)[None, None] + dyn        # (B, S, 5, d)
+    xr, xk, xv, xg, xw = [x + delta * mix[:, :, i] for i in range(5)]
+
+    r = (xr @ tm["wr"].astype(dt)).reshape(B, S, H, hd)
+    k = (xk @ tm["wk"].astype(dt)).reshape(B, S, H, hd)
+    v = (xv @ tm["wv"].astype(dt)).reshape(B, S, H, hd)
+    g = jax.nn.silu(xg @ tm["wg"].astype(dt))
+    # data-dependent decay (fp32 for stability)
+    wd = tm["w_base"].astype(jnp.float32) + \
+        (jnp.tanh(xw @ tm["dec_a"].astype(dt)).astype(jnp.float32)
+         @ tm["dec_b"].astype(jnp.float32))
+    w = jnp.exp(-jnp.exp(wd)).reshape(B, S, H, hd)     # decay in (0,1)
+
+    if use_pallas and seq_mask is None:
+        from repro.kernels.rwkv6_scan import ops as wkv_ops
+        y, state = wkv_ops.wkv6(r, k, v, w.astype(r.dtype), tm["u"], state)
+    else:
+        y, state = wkv6_scan(r, k, v, w.astype(r.dtype), tm["u"], state,
+                             seq_mask=seq_mask)
+
+    # per-head group norm
+    y32 = y.astype(jnp.float32)
+    mean = y32.mean(-1, keepdims=True)
+    var = y32.var(-1, keepdims=True)
+    y = ((y32 - mean) * jax.lax.rsqrt(var + 64e-5)).astype(dt)
+    y = (y.reshape(B, S, d) * tm["ln_x"].astype(dt)) * g
+    return y @ tm["wo"].astype(dt), new_prev, state
+
+
+def apply_channel_mix(cm, cfg, x, prev_x):
+    dt = x.dtype
+    shifted, new_prev = _token_shift(x, prev_x)
+    delta = shifted - x
+    xk = x + delta * cm["mu_k"].astype(dt)
+    xr = x + delta * cm["mu_r"].astype(dt)
+    k = jnp.square(jax.nn.relu(xk @ cm["wk"].astype(dt)))
+    return jax.nn.sigmoid(xr @ cm["wr"].astype(dt)) * (k @ cm["wv"].astype(dt)), new_prev
+
+
+def init_rwkv_state(cfg, batch, dtype):
+    d = cfg.d_model
+    H = d // cfg.rwkv.head_dim
+    return {
+        "wkv": jnp.zeros((batch, H, cfg.rwkv.head_dim, cfg.rwkv.head_dim), jnp.float32),
+        "tm_prev": jnp.zeros((batch, d), dtype),
+        "cm_prev": jnp.zeros((batch, d), dtype),
+    }

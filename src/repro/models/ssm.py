@@ -1,0 +1,164 @@
+"""Mamba-style selective SSM head (used by the hymba hybrid block).
+
+    h_t = exp(Δ_t ⊙ A) ⊙ h_{t-1} + Δ_t ⊙ (B_t ⊗ x_t)
+    y_t = C_t · h_t + D ⊙ x_t
+
+with input-dependent Δ, B, C. Decode state per slot: (d_inner, d_state)
+SSM state + (conv_dim-1, d_inner) conv tail. The sequential scan is the
+reference semantics for kernels/ssm_scan.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import dense_init, split_keys
+
+
+def d_inner_of(cfg):
+    return cfg.ssm.expand * cfg.d_model
+
+
+def dt_rank_of(cfg):
+    return cfg.ssm.dt_rank or max(1, int(np.ceil(cfg.d_model / 16)))
+
+
+def init_ssm(key, cfg, dtype):
+    s = cfg.ssm
+    d = cfg.d_model
+    di = d_inner_of(cfg)
+    dr = dt_rank_of(cfg)
+    ks = split_keys(key, 5)
+    A = jnp.tile(jnp.arange(1, s.state_dim + 1, dtype=jnp.float32)[None, :], (di, 1))
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * di), dtype),          # x and gate z
+        "conv": dense_init(ks[1], (s.conv_dim, di), dtype, fan_in=s.conv_dim),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": dense_init(ks[2], (di, dr + 2 * s.state_dim), dtype),
+        "dt_proj": dense_init(ks[3], (dr, di), dtype),
+        "dt_bias": jnp.log(jnp.expm1(0.01)) * jnp.ones((di,), jnp.float32),
+        "A_log": jnp.log(A),                                        # (di, N) fp32
+        "D": jnp.ones((di,), jnp.float32),
+        # project back to d_model so hymba can fuse attn+ssm outputs post-proj
+        "out_proj": dense_init(ks[4], (di, d), dtype),
+    }
+
+
+def causal_conv1d(x, w, b, conv_state=None, lengths=None):
+    """x: (B, S, di); w: (K, di) depthwise. conv_state: (B, K-1, di) tail of
+    the previous chunk (zeros at start). Returns (y, new_conv_state). With
+    ``lengths`` (right-padded rows) the new state is gathered at each row's
+    last valid position instead of the fixed tail."""
+    K = w.shape[0]
+    B = x.shape[0]
+    if conv_state is None:
+        conv_state = jnp.zeros((B, K - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([conv_state, x], axis=1)                  # (B, S+K-1, di)
+    # depthwise conv as sum of shifted slices (K is tiny, 4)
+    S = x.shape[1]
+    y = sum(xp[:, i:i + S, :] * w[i][None, None, :] for i in range(K))
+    if K > 1:
+        if lengths is not None:
+            # xp[j] corresponds to x[j-(K-1)]; tail for row b ends at x[l-1]
+            new_state = jax.vmap(lambda xb, l: jax.lax.dynamic_slice(
+                xb, (l, 0), (K - 1, xb.shape[-1])))(xp, lengths)
+        else:
+            new_state = xp[:, -(K - 1):, :]
+    else:
+        new_state = conv_state
+    return y + b[None, None, :], new_state
+
+
+def selective_scan(x, dt, A, Bc, Cc, D, state, seq_mask=None,
+                   chunk: int = 256):
+    """Reference sequential scan (fp32), time-chunked with per-chunk remat.
+
+    x, dt: (B, S, di); A: (di, N); Bc, Cc: (B, S, N); D: (di,);
+    state: (B, di, N). ``seq_mask`` (B, S) freezes the state across
+    right-pads (dA -> 1, dBx -> 0). Returns y (B, S, di), final state.
+
+    Memory-traffic design (EXPERIMENTS.md §Perf, hillclimb A): dA/dBx are
+    formed INSIDE the step (never a (B, S, di, N) tensor), and the scan is
+    chunked with ``jax.checkpoint`` at chunk boundaries so the VJP stores
+    only (B, di, N) states per chunk instead of per timestep — the pure-JAX
+    analogue of the Pallas kernel's VMEM-resident state.
+    """
+    out_dt = x.dtype
+    B, S, di = x.shape
+    x, dt, Bc, Cc = (a.astype(jnp.float32) for a in (x, dt, Bc, Cc))
+    state = state.astype(jnp.float32)
+    if seq_mask is not None:
+        dt = dt * seq_mask[..., None].astype(jnp.float32)   # dt=0 -> dA=1, dBx=0
+    negA = -jnp.exp(A)                                       # (di, N)
+
+    from repro.common.partitioning import shard_activation
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp                 # (B,di),(B,di),(B,N),(B,N)
+        da = jnp.exp(negA[None] * dtt[..., None])            # (B,di,N)
+        h = da * h + (dtt * xt)[..., None] * bt[:, None, :]
+        # keep di sharded on the model axis across the recurrence — without
+        # this, SPMD replicates di inside the loop and the per-step
+        # residual stash is stored full-width on every device
+        h = shard_activation(h, "dp", "tp", None)
+        y = jnp.einsum("bdn,bn->bd", h, ct)
+        return h, y
+
+    def run(state, xs):
+        state, ys = jax.lax.scan(step, state, xs)
+        return state, ys
+
+    # (time, batch, feature) layouts, feature kept on the model axis
+    x_s = shard_activation(jnp.moveaxis(x, 1, 0), None, "dp", "tp")
+    dt_s = shard_activation(jnp.moveaxis(dt, 1, 0), None, "dp", "tp")
+    b_s = jnp.moveaxis(Bc, 1, 0)
+    c_s = jnp.moveaxis(Cc, 1, 0)
+
+    if chunk and chunk < S and S % chunk == 0:
+        nc = S // chunk
+        xs = tuple(a.reshape((nc, chunk) + a.shape[1:])
+                   for a in (x_s, dt_s, b_s, c_s))
+        state, ys = jax.lax.scan(jax.checkpoint(run), state, xs)
+        ys = ys.reshape((S,) + ys.shape[2:])
+    else:
+        state, ys = run(state, (x_s, dt_s, b_s, c_s))
+    y = jnp.moveaxis(ys, 0, 1) + x * D[None, None, :]
+    return y.astype(out_dt), state
+
+
+def apply_ssm(params, cfg, x, state=None, conv_state=None, *,
+              lengths=None, seq_mask=None, use_pallas: bool = False):
+    """x: (B, S, d) -> (y (B, S, d), new_state, new_conv_state).
+
+    Right-padded rows: pass ``seq_mask`` (freezes SSM state across pads) and
+    ``lengths`` (conv tail gathered at each row's last valid token)."""
+    s = cfg.ssm
+    dt_ = x.dtype
+    B, S, _ = x.shape
+    di = d_inner_of(cfg)
+    dr = dt_rank_of(cfg)
+
+    xz = x @ params["in_proj"].astype(dt_)
+    xi, z = jnp.split(xz, 2, axis=-1)                               # (B,S,di) each
+    xi, conv_state = causal_conv1d(xi, params["conv"].astype(dt_),
+                                   params["conv_b"].astype(dt_), conv_state,
+                                   lengths=lengths)
+    xi = jax.nn.silu(xi)
+
+    proj = xi @ params["x_proj"].astype(dt_)                        # (B,S,dr+2N)
+    dt_lo, Bc, Cc = jnp.split(proj, [dr, dr + s.state_dim], axis=-1)
+    dt = jax.nn.softplus(dt_lo.astype(jnp.float32) @ params["dt_proj"].astype(jnp.float32)
+                         + params["dt_bias"][None, None])           # (B,S,di)
+
+    if state is None:
+        state = jnp.zeros((B, di, s.state_dim), jnp.float32)
+    if use_pallas and seq_mask is None:
+        from repro.kernels.ssm_scan import ops as ssm_ops
+        y, state = ssm_ops.selective_scan(xi, dt.astype(dt_), params["A_log"],
+                                          Bc, Cc, params["D"], state)
+    else:
+        y, state = selective_scan(xi, dt.astype(dt_), params["A_log"],
+                                  Bc, Cc, params["D"], state, seq_mask=seq_mask)
+    y = y * jax.nn.silu(z)
+    return y @ params["out_proj"].astype(dt_), state, conv_state

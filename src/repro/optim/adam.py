@@ -1,0 +1,57 @@
+"""AdamW + global-norm clipping (no optax in this environment)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init(params):
+    zeros = lambda p: jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32), p)
+    return {"m": zeros(params), "v": zeros(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree):
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), gn
+
+
+def update(grads, state, params, *, lr, betas=(0.9, 0.999), eps=1e-8,
+           weight_decay=0.0, grad_clip=0.0):
+    """Returns (new_params, new_state, metrics). ``lr`` may be a scalar array
+    (schedule evaluated by the caller)."""
+    b1, b2 = betas
+    gn = jnp.zeros(())
+    if grad_clip and grad_clip > 0.0:
+        grads, gn = clip_by_global_norm(grads, grad_clip)
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** t
+    bc2 = 1.0 - b2 ** t
+
+    def upd(g, m, v, p):
+        g32 = g.astype(jnp.float32)
+        m = b1 * m + (1.0 - b1) * g32
+        v = b2 * v + (1.0 - b2) * jnp.square(g32)
+        mhat = m / bc1
+        vhat = v / bc2
+        delta = mhat / (jnp.sqrt(vhat) + eps)
+        if weight_decay:
+            delta = delta + weight_decay * p.astype(jnp.float32)
+        return m, v, (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    flat_p = treedef.flatten_up_to(params)
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_m = treedef.unflatten([o[0] for o in out])
+    new_v = treedef.unflatten([o[1] for o in out])
+    new_p = treedef.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "step": step}, {"grad_norm": gn}

@@ -1,0 +1,17 @@
+"""Learning-rate schedules."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_constant(step, *, lr: float, warmup_steps: int):
+    w = jnp.minimum(1.0, (step + 1) / max(warmup_steps, 1))
+    return lr * w
+
+
+def warmup_cosine(step, *, lr: float, warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.1):
+    w = jnp.minimum(1.0, (step + 1) / max(warmup_steps, 1))
+    p = jnp.clip((step - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+    cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * p))
+    return lr * w * cos

@@ -1,0 +1,56 @@
+"""Slot-pool cache utilities.
+
+The CoPRIS inference engine keeps a *fixed pool* of ``N'`` slots — the
+TPU-native analogue of vLLM's continuous batching (see DESIGN.md §3). Every
+model family's per-request state (KV cache, RWKV wkv state, SSM/conv state,
+token-shift carries) lives batched inside one cache pytree:
+
+* ``cache["prefix"][i]`` leaves have the slot/batch axis at **axis 0**
+* ``cache["body"]`` leaves are layer-stacked: slot/batch axis at **axis 1**
+
+These helpers insert freshly prefilled requests into slots, extract per-slot
+snapshots (the ``kv_snapshot`` resume strategy), and reset slots.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def _map_with_axis(fn, cache, *rest):
+    """tree-map over a stack cache with the batch-axis per subtree."""
+    prefix = jax.tree.map(functools.partial(fn, 0), cache["prefix"],
+                          *[r["prefix"] for r in rest])
+    body = jax.tree.map(functools.partial(fn, 1), cache["body"],
+                        *[r["body"] for r in rest])
+    return {"prefix": prefix, "body": body}
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def insert_slots(cache, new_cache, slot_ids):
+    """Scatter ``new_cache`` (batch = len(slot_ids)) into ``cache`` at
+    ``slot_ids`` along the slot axis."""
+    def upd(axis, big, small):
+        if axis == 0:
+            return big.at[slot_ids].set(small.astype(big.dtype))
+        return big.at[:, slot_ids].set(small.astype(big.dtype))  # (R, n, ...)
+    return _map_with_axis(upd, cache, new_cache)
+
+
+@jax.jit
+def extract_slots(cache, slot_ids):
+    """Gather a per-slot snapshot (batch = len(slot_ids))."""
+    def take(axis, big):
+        return jnp.take(big, slot_ids, axis=axis)
+    return _map_with_axis(take, cache)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def zero_slots(cache, slot_ids):
+    def z(axis, big):
+        if axis == 0:
+            return big.at[slot_ids].set(0)
+        return big.at[:, slot_ids].set(0)
+    return _map_with_axis(z, cache)

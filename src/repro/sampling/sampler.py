@@ -1,0 +1,51 @@
+"""Token sampler: temperature / top-k / top-p, returning the sampled token
+AND its log-probability under the actual sampling distribution.
+
+The behaviour log-prob recorded here is what CoPRIS buffers per token
+(eq. 6 of the paper): tokens keep the log-prob of the policy *stage* that
+generated them, and the cross-stage IS ratio at training time is
+``exp(logp_current - behaviour_logp)``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _apply_top_k(logits, k: int):
+    if k <= 0 or k >= logits.shape[-1]:
+        return logits
+    thresh = jax.lax.top_k(logits, k)[0][..., -1:]
+    return jnp.where(logits < thresh, NEG_INF, logits)
+
+
+def _apply_top_p(logits, p: float):
+    if p >= 1.0:
+        return logits
+    sorted_logits = jnp.sort(logits, axis=-1)[..., ::-1]
+    probs = jax.nn.softmax(sorted_logits, axis=-1)
+    cum = jnp.cumsum(probs, axis=-1)
+    # keep tokens until cumulative prob exceeds p (always keep the first)
+    cutoff_mask = cum - probs < p
+    thresh = jnp.min(jnp.where(cutoff_mask, sorted_logits, jnp.inf),
+                     axis=-1, keepdims=True)
+    return jnp.where(logits < thresh, NEG_INF, logits)
+
+
+def sample(key, logits, *, temperature: float = 1.0, top_p: float = 1.0,
+           top_k: int = -1):
+    """logits: (B, V) fp32. Returns (tokens (B,), logps (B,)) where logps are
+    log-probabilities under the (tempered, truncated) sampling distribution.
+    temperature == 0 -> greedy."""
+    if temperature <= 0.0:
+        tok = jnp.argmax(logits, axis=-1)
+        return tok, jnp.zeros(tok.shape, jnp.float32)
+    l = logits / temperature
+    l = _apply_top_k(l, top_k)
+    l = _apply_top_p(l, top_p)
+    tok = jax.random.categorical(key, l, axis=-1)
+    logp = jax.nn.log_softmax(l, axis=-1)
+    lp = jnp.take_along_axis(logp, tok[:, None], axis=-1)[:, 0]
+    return tok, lp

@@ -1,0 +1,21 @@
+import os
+
+# tests must see the single real CPU device (the dry-run sets its own flags
+# in a subprocess); keep XLA quiet and deterministic
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+import pytest
+from hypothesis import settings
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: long-running integration test")

@@ -1,0 +1,165 @@
+"""Scheduler/buffer invariants — property-based (hypothesis) over random
+completion patterns, using a pure-Python simulated engine (no model)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.common.config import RolloutConfig
+from repro.core.buffer import TrajectoryBuffer
+from repro.core.scheduler import ConcurrencyScheduler
+from repro.core.trajectory import Group, Trajectory
+
+
+def make_group_factory(G, rng, prompt_len=4):
+    counter = [0]
+
+    def new_group():
+        g = Group(group_id=counter[0],
+                  prompt_tokens=np.arange(prompt_len, dtype=np.int32),
+                  answer=0, size=G)
+        counter[0] += 1
+        return g
+    return new_group
+
+
+def simulate(mode, N_prime, B, G, seed, max_steps=50_000):
+    """Drive the scheduler with geometric completion times. Returns
+    (completed_groups, buffer, trace of in-flight counts, scheduler)."""
+    rng = np.random.default_rng(seed)
+    cfg = RolloutConfig(batch_size=B, group_size=G, concurrency=N_prime,
+                        mode=mode, max_response_len=10_000)
+    buf = TrajectoryBuffer()
+    sched = ConcurrencyScheduler(cfg, buf, make_group_factory(G, rng))
+    pool = N_prime if mode != "sync" else B * G
+    slots = [None] * pool
+    stage = 0
+    trace = []
+
+    def refill(i):
+        while not sched.done:
+            t = sched.next_request()
+            if t is None:
+                slots[i] = None
+                return
+            slots[i] = t
+            return
+
+    for i in range(pool):
+        refill(i)
+    for step in range(max_steps):
+        active = [i for i, t in enumerate(slots) if t is not None]
+        if sched.done or not active:
+            break
+        trace.append(len(active))
+        for i in active:
+            t = slots[i]
+            t.append(int(rng.integers(0, 50)), -1.0, stage)
+            if rng.random() < 0.05:        # geometric finishing
+                t.done = True
+                t.finish_reason = "eos"
+                sched.release(t)
+                slots[i] = None
+        sched.harvest()
+        for i in range(pool):
+            if slots[i] is None and not sched.done:
+                refill(i)
+    for t in slots:
+        if t is not None:
+            sched.release(t)
+    sched.harvest()
+    return sched.completed, buf, trace, sched
+
+
+@given(N=st.sampled_from([4, 8, 16]), B=st.integers(2, 5), G=st.sampled_from([2, 4]),
+       seed=st.integers(0, 10_000))
+@settings(max_examples=25, deadline=None)
+def test_copris_invariants(N, B, G, seed):
+    completed, buf, trace, sched = simulate("copris", N, B, G, seed)
+    # early termination: exactly B groups harvested (surplus stays buffered)
+    assert len(completed) >= B
+    for g in completed[:B]:
+        assert g.complete and len(g.trajectories) == G
+    # concurrency control: slots always full while collecting
+    assert all(n == N for n in trace[:-1]), "in-flight count must stay at N'"
+    # nothing lost: every buffered trajectory intact
+    for g in buf.groups():
+        for t in g.trajectories:
+            t.check_invariants()
+
+
+@given(B=st.integers(2, 4), G=st.sampled_from([2, 4]), seed=st.integers(0, 10_000))
+@settings(max_examples=15, deadline=None)
+def test_sync_mode_completes_everything(B, G, seed):
+    completed, buf, trace, _ = simulate("sync", 0, B, G, seed)
+    assert len(completed) == B
+    assert len(buf) == 0, "sync mode must not buffer partial trajectories"
+    # long-tail signature: concurrency decays as trajectories finish
+    assert trace[-1] <= B * G
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=15, deadline=None)
+def test_naive_partial_no_refill(seed):
+    N, B, G = 16, 2, 2
+    completed, buf, trace, sched = simulate("naive_partial", N, B, G, seed)
+    assert sched.dispatched <= N, "naive partial must not refill beyond N'"
+    assert len(completed) >= B
+
+
+@given(seed=st.integers(0, 10_000), stages=st.integers(2, 4))
+@settings(max_examples=15, deadline=None)
+def test_cross_stage_resumption(seed, stages):
+    """Across stages: buffered partials are resumed (prioritized), stage ids
+    stay non-decreasing per token, and resumed trajectories grow."""
+    rng = np.random.default_rng(seed)
+    cfg = RolloutConfig(batch_size=2, group_size=2, concurrency=4,
+                        mode="copris", max_response_len=10_000)
+    buf = TrajectoryBuffer()
+    lens_before = {}
+    for stage in range(stages):
+        sched = ConcurrencyScheduler(cfg, buf, make_group_factory(2, rng))
+        slots = [None] * 4
+        for i in range(4):
+            t = sched.next_request()
+            if t is not None:
+                if t.traj_id in lens_before:
+                    assert len(t.response_tokens) >= lens_before[t.traj_id]
+                slots[i] = t
+        for _ in range(10_000):
+            active = [i for i, t in enumerate(slots) if t is not None]
+            if sched.done or not active:
+                break
+            for i in active:
+                t = slots[i]
+                t.append(int(rng.integers(0, 50)), -1.0, stage)
+                if rng.random() < 0.08:
+                    t.done = True
+                    sched.release(t)
+                    slots[i] = None
+            sched.harvest()
+            for i in range(4):
+                if slots[i] is None and not sched.done:
+                    t = sched.next_request()
+                    slots[i] = t
+        for t in slots:
+            if t is not None:
+                sched.release(t)
+                lens_before[t.traj_id] = len(t.response_tokens)
+        sched.harvest()
+        for g in sched.completed:
+            for t in g.trajectories:
+                t.check_invariants()      # stage ids non-decreasing
+
+
+def test_buffer_pop_resumable_longest_first():
+    buf = TrajectoryBuffer()
+    g = Group(group_id=0, prompt_tokens=np.zeros(4, np.int32), answer=0, size=3)
+    buf.add_group(g)
+    t1, t2, t3 = g.spawn(), g.spawn(), g.spawn()
+    for t, n in ((t1, 3), (t2, 9), (t3, 5)):
+        for i in range(n):
+            t.append(1, -1.0, 0)
+    assert buf.pop_resumable() is t2          # longest first
+    assert buf.pop_resumable(exclude={t2.traj_id}) is t3
+    t2.done = t3.done = True
+    assert buf.pop_resumable(exclude=set()) is t1

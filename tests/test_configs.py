@@ -1,0 +1,59 @@
+"""Architecture registry: configs instantiate, param counts match the
+published model sizes, smoke reductions respect the assignment constraints."""
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, get_config, get_smoke_config, list_archs
+
+# published parameter counts (billions) with tolerance — validates that the
+# assigned config table was transcribed faithfully
+EXPECTED_PARAMS_B = {
+    "llama3.2-1b": (1.0, 1.4),
+    "rwkv6-1.6b": (1.4, 2.0),
+    "qwen3-14b": (13.5, 15.5),
+    "musicgen-medium": (1.3, 2.1),
+    "qwen3-moe-235b-a22b": (225, 245),
+    "granite-34b": (33, 48),          # gated-MLP counting vs paper's GPT MLP
+    "deepseek-moe-16b": (15.5, 17.5),
+    "llama-3.2-vision-90b": (83, 92),
+    "gemma2-2b": (2.2, 3.0),
+    "hymba-1.5b": (1.2, 1.8),
+}
+
+
+def test_ten_assigned_archs():
+    assert len(ASSIGNED_ARCHS) == 10
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_config_instantiates(arch):
+    cfg = get_config(arch)
+    assert cfg.num_layers >= 1
+    assert cfg.source, "every assigned config must cite its source"
+    lo, hi = EXPECTED_PARAMS_B[arch]
+    n = cfg.param_count() / 1e9
+    assert lo <= n <= hi, f"{arch}: {n:.2f}B outside [{lo}, {hi}]"
+
+
+def test_moe_active_params():
+    cfg = get_config("qwen3-moe-235b-a22b")
+    active = cfg.param_count(active_only=True) / 1e9
+    assert 20 <= active <= 25          # "a22b"
+    cfg = get_config("deepseek-moe-16b")
+    active = cfg.param_count(active_only=True) / 1e9
+    assert 2.0 <= active <= 3.5        # ~2.8B activated
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_smoke_reduction_constraints(arch):
+    s = get_smoke_config(arch)
+    assert s.num_layers <= 2 + len(s.prefix_pattern)
+    assert s.d_model <= 512
+    if s.moe is not None:
+        assert s.moe.num_experts <= 4
+
+
+def test_long_ctx_eligibility():
+    assert get_config("rwkv6-1.6b").is_subquadratic
+    assert get_config("hymba-1.5b").is_subquadratic
+    assert not get_config("llama3.2-1b").is_subquadratic
+    assert not get_config("qwen3-moe-235b-a22b").is_subquadratic

@@ -1,0 +1,35 @@
+"""pass@k estimator + eval harness + multihost launcher guard."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data.tasks import AdditionTask, EOS
+from repro.eval.passk import evaluate, pass_at_k
+from repro.models import model as M
+
+
+def test_pass_at_k_estimator():
+    assert pass_at_k(10, 0, 1) == 0.0
+    assert pass_at_k(10, 10, 1) == 1.0
+    assert pass_at_k(4, 2, 4) == 1.0            # k > n-c -> certain
+    # n=4, c=1, k=1 -> 1/4
+    assert abs(pass_at_k(4, 1, 1) - 0.25) < 1e-9
+    # n=4, c=1, k=2 -> 1 - C(3,2)/C(4,2) = 1 - 3/6
+    assert abs(pass_at_k(4, 1, 2) - 0.5) < 1e-9
+
+
+def test_evaluate_runs_on_engine():
+    cfg = get_config("tiny")
+    task = AdditionTask(max_value=9, seed=0)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    out = evaluate(params, cfg, task, eos_id=EOS, n_prompts=4,
+                   samples_per_prompt=4, max_response=8, ks=(1, 4))
+    assert set(out) >= {"pass@1", "pass@4", "mean_reward", "mean_len"}
+    assert 0.0 <= out["pass@1"] <= out["pass@4"] <= 1.0
+
+
+def test_multihost_guard_on_cpu():
+    """On 1 device the launcher must refuse cleanly (exit code 2)."""
+    from repro.launch import multihost
+    assert multihost.main(["--arch", "tiny", "--dry"]) == 2

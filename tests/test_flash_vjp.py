@@ -1,0 +1,64 @@
+"""Flash-attention custom VJP (hillclimb A3): gradients must match autodiff
+through the naive materialising reference across GQA/MQA/softcap/window."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attn.ref import naive_attention
+from repro.models.attention import chunked_attention
+
+CASES = [
+    # B, Sq, Sk, H, KV, hd, causal, window, softcap
+    (2, 128, 128, 4, 2, 32, True, 0, 0.0),
+    (1, 100, 100, 4, 4, 32, True, 0, 50.0),
+    (2, 96, 96, 5, 5, 32, True, 32, 0.0),      # heads not divisible by 2^k
+    (1, 64, 160, 4, 1, 32, False, 0, 0.0),     # MQA, cross-attention shape
+]
+
+
+@pytest.mark.parametrize("case", CASES)
+def test_flash_vjp_matches_naive_grads(case):
+    B, Sq, Sk, H, KV, hd, causal, win, cap = case
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    q = jax.random.normal(ks[0], (B, Sq, H, hd))
+    k = jax.random.normal(ks[1], (B, Sk, KV, hd))
+    v = jax.random.normal(ks[2], (B, Sk, KV, hd))
+    ct = jax.random.normal(ks[3], (B, Sq, H, hd)) * 0.1
+
+    def f1(q, k, v):
+        return (chunked_attention(q, k, v, causal=causal, window=win,
+                                  attn_softcap=cap, block_q=32, block_k=32)
+                * ct).sum()
+
+    def f2(q, k, v):
+        return (naive_attention(q, k, v, causal=causal, window=win,
+                                attn_softcap=cap) * ct).sum()
+
+    o1 = chunked_attention(q, k, v, causal=causal, window=win,
+                           attn_softcap=cap, block_q=32, block_k=32)
+    o2 = naive_attention(q, k, v, causal=causal, window=win, attn_softcap=cap)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=3e-5)
+    g1 = jax.grad(f1, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(f2, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=5e-5)
+
+
+def test_flash_vjp_no_quadratic_residuals():
+    """The residuals saved by the custom VJP are O(S), not O(S²): only
+    (q, k, v, out, L) — validated structurally via the vjp closure."""
+    B, S, H, hd = 1, 256, 2, 32
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, 2, hd))
+    v = jax.random.normal(ks[2], (B, S, 2, hd))
+    out, vjp = jax.vjp(lambda q, k, v: chunked_attention(
+        q, k, v, block_q=64, block_k=64), q, k, v)
+    # residual sizes: everything the closure holds should be O(S·d)
+    leaves = jax.tree.leaves(vjp)
+    for leaf in leaves:
+        if hasattr(leaf, "size"):
+            assert leaf.size <= 4 * B * S * H * hd, leaf.shape
+    dq, dk, dv = vjp(jnp.ones_like(out))
+    assert dq.shape == q.shape and dk.shape == k.shape and dv.shape == v.shape

@@ -1,0 +1,105 @@
+"""GRPO loss + cross-stage IS correction: hand-computed cases + properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import grpo
+
+
+def test_group_advantages_hand():
+    r = jnp.asarray([1.0, 0.0, 1.0, 0.0, 0.0, 0.0, 0.0, 0.0])
+    a = grpo.group_advantages(r, 4)
+    # group 1: mean .5 std .5 -> [1, -1, 1, -1]; group 2: all 0 -> 0
+    np.testing.assert_allclose(a[:4], [1, -1, 1, -1], atol=1e-4)
+    np.testing.assert_allclose(a[4:], [0, 0, 0, 0], atol=1e-4)
+
+
+@given(st.lists(st.floats(0, 1, width=32), min_size=8, max_size=8))
+@settings(max_examples=25, deadline=None)
+def test_group_advantages_zero_mean(rs):
+    a = grpo.group_advantages(jnp.asarray(rs, jnp.float32), 4)
+    g = np.asarray(a).reshape(2, 4)
+    np.testing.assert_allclose(g.mean(1), 0.0, atol=1e-4)
+
+
+def test_is_ratio_identity_when_on_policy():
+    """behaviour == current -> ratio 1 -> loss = -mean(adv) over tokens."""
+    lp = jnp.log(jnp.asarray([[0.5, 0.25], [0.1, 0.9]]))
+    adv = jnp.asarray([1.0, -2.0])
+    mask = jnp.ones((2, 2))
+    loss, m = grpo.grpo_loss(lp, lp, adv, mask)
+    np.testing.assert_allclose(float(m["ratio_mean"]), 1.0, atol=1e-6)
+    np.testing.assert_allclose(float(loss), -(1.0 + 1.0 - 2.0 - 2.0) / 4, atol=1e-6)
+
+
+def test_clip_asymmetric():
+    """ratio above 1+clip_high with positive advantage is clipped; below
+    1-clip_low with negative advantage is clipped (dual-clip, Table 3)."""
+    behaviour = jnp.zeros((1, 1))
+    adv = jnp.asarray([1.0])
+    mask = jnp.ones((1, 1))
+    # ratio = e ~ 2.72 > 1.28 -> objective clipped at 1.28 * adv
+    loss, _ = grpo.grpo_loss(jnp.ones((1, 1)), behaviour, adv, mask,
+                             clip_low=0.2, clip_high=0.28)
+    np.testing.assert_allclose(float(loss), -1.28, atol=1e-5)
+    # negative advantage: min picks the UNCLIPPED (more negative) branch
+    loss2, _ = grpo.grpo_loss(jnp.ones((1, 1)), behaviour, -adv, mask,
+                              clip_low=0.2, clip_high=0.28)
+    np.testing.assert_allclose(float(loss2), float(jnp.exp(1.0)), atol=1e-4)
+
+
+def test_without_is_ratio_is_one():
+    """w/o IS ablation (Fig 4): ratios pinned to 1 regardless of behaviour."""
+    lp_new = jnp.asarray([[-1.0, -2.0]])
+    behaviour = jnp.asarray([[-5.0, -0.1]])
+    adv = jnp.asarray([1.0])
+    mask = jnp.ones((1, 2))
+    _, m = grpo.grpo_loss(lp_new, behaviour, adv, mask, use_is=False)
+    np.testing.assert_allclose(float(m["ratio_mean"]), 1.0, atol=1e-6)
+
+
+def test_is_ratio_cap():
+    lp_new = jnp.asarray([[0.0]])
+    behaviour = jnp.asarray([[-50.0]])      # raw ratio e^50
+    adv = jnp.asarray([-1.0])               # negative adv -> unclipped branch
+    _, m = grpo.grpo_loss(lp_new, behaviour, adv, jnp.ones((1, 1)),
+                          is_ratio_cap=10.0)
+    assert float(m["ratio_max"]) <= 10.0 + 1e-4
+
+
+def test_masked_tokens_do_not_contribute():
+    lp = jnp.asarray([[-1.0, -1.0], [-1.0, -1.0]])
+    behaviour = jnp.asarray([[-1.0, -9.9], [-1.0, -3.3]])
+    adv = jnp.asarray([1.0, 1.0])
+    mask_all = jnp.asarray([[1.0, 0.0], [1.0, 0.0]])
+    loss, _ = grpo.grpo_loss(lp, behaviour, adv, mask_all)
+    loss_ref, _ = grpo.grpo_loss(lp[:, :1], behaviour[:, :1], adv,
+                                 jnp.ones((2, 1)))
+    np.testing.assert_allclose(float(loss), float(loss_ref), atol=1e-6)
+
+
+def test_kl_term_zero_when_equal():
+    lp = jnp.asarray([[-1.0, -2.0]])
+    adv = jnp.asarray([0.0])
+    mask = jnp.ones((1, 2))
+    l0, _ = grpo.grpo_loss(lp, lp, adv, mask, kl_coef=0.1, ref_logp=lp)
+    np.testing.assert_allclose(float(l0), 0.0, atol=1e-6)
+
+
+@given(st.integers(1, 4), st.integers(2, 6))
+@settings(max_examples=15, deadline=None)
+def test_loss_gradient_direction(n_groups, T):
+    """With positive advantage and IS on, the gradient pushes logp up."""
+    key = jax.random.PRNGKey(n_groups * 10 + T)
+    N = n_groups * 2
+    lp = -jnp.abs(jax.random.normal(key, (N, T)))
+
+    def f(lp_new):
+        loss, _ = grpo.grpo_loss(lp_new, jax.lax.stop_gradient(lp_new),
+                                 jnp.ones((N,)), jnp.ones((N, T)))
+        return loss
+
+    g = jax.grad(f)(lp)
+    assert (np.asarray(g) <= 1e-8).all()    # -d(loss)/d(logp) >= 0

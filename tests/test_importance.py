@@ -1,0 +1,54 @@
+"""pack_groups alignment properties (hypothesis over random trajectories)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.importance import pack_groups
+from repro.core.trajectory import Group
+
+
+def random_groups(rng, n_groups, G, max_p=8, max_r=20):
+    groups = []
+    for gi in range(n_groups):
+        P = int(rng.integers(2, max_p))
+        g = Group(group_id=gi, prompt_tokens=rng.integers(0, 50, P).astype(np.int32),
+                  answer=0, size=G)
+        for _ in range(G):
+            t = g.spawn()
+            R = int(rng.integers(1, max_r))
+            for j in range(R):
+                t.append(int(rng.integers(0, 50)), float(-rng.random()),
+                         int(rng.integers(0, 3)))
+            # enforce non-decreasing stages
+            t.stage_ids = sorted(t.stage_ids)
+            t.done = True
+            t.reward = float(rng.random())
+        groups.append(g)
+    return groups
+
+
+@given(seed=st.integers(0, 99_999), n=st.integers(1, 4), G=st.sampled_from([2, 4]))
+@settings(max_examples=25, deadline=None)
+def test_pack_alignment(seed, n, G):
+    rng = np.random.default_rng(seed)
+    groups = random_groups(rng, n, G)
+    b = pack_groups(groups, pad_multiple=16)
+    N, T = b["tokens"].shape
+    assert N == n * G and T % 16 == 0
+    for i, t in enumerate([t for g in groups for t in g.trajectories]):
+        P, L = b["prompt_lens"][i], b["total_lens"][i]
+        assert L == t.total_len
+        np.testing.assert_array_equal(b["tokens"][i, :L], t.full_tokens())
+        # mask exactly covers response region
+        assert b["response_mask"][i, :P].sum() == 0
+        assert b["response_mask"][i, P:L].sum() == L - P
+        assert b["response_mask"][i, L:].sum() == 0
+        # behaviour logps aligned token-for-token
+        np.testing.assert_allclose(b["behaviour_logp"][i, P:L],
+                                   t.behaviour_logps)
+        np.testing.assert_array_equal(b["stage_ids"][i, P:L], t.stage_ids)
+        # padding regions carry no stale behaviour values
+        assert (b["behaviour_logp"][i, L:] == 0).all()
+        assert (b["stage_ids"][i, :P] == -1).all()
+    # group-major order: reshaping recovers groups
+    gi = b["group_index"].reshape(n, G)
+    assert (gi == gi[:, :1]).all()
