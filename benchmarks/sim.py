@@ -77,6 +77,14 @@ class StepStats:
     resumed: int = 0
     thrash_steps: int = 0
     slot_utilization: float = 0.0
+    # host<->device round-trips: chunked decode transfers once per
+    # decode_chunk engine steps; refills are batched per boundary
+    decode_syncs: int = 0
+    prefill_syncs: int = 0
+
+    @property
+    def host_syncs(self):
+        return self.decode_syncs + self.prefill_syncs
 
     @property
     def step_time(self):
@@ -115,9 +123,7 @@ class RolloutSim:
         return self._targets[traj.traj_id]
 
     def _materialise(self, traj, n_new: int):
-        traj.response_tokens.extend([0] * n_new)
-        traj.behaviour_logps.extend([-1.0] * n_new)
-        traj.stage_ids.extend([self.stage] * n_new)
+        traj.append_run([0] * n_new, [-1.0] * n_new, self.stage)
 
     # -- one RL step ----------------------------------------------------
     def run_step(self) -> StepStats:
@@ -169,6 +175,8 @@ class RolloutSim:
 
         for i in range(pool):
             refill(i)
+        st.prefill_syncs += 1          # one batched multi-slot prefill
+        refill_chunks: set = set()     # chunk indices containing a refill
 
         total_slot_steps = 0
         active_slot_steps = 0
@@ -198,6 +206,13 @@ class RolloutSim:
                 for i in done_idx:
                     if not sched.done:
                         refill(i)
+                        # the real engine batches refills into one prefill
+                        # round-trip per decode-chunk boundary: count each
+                        # chunk that contains at least one refill once
+                        # (decode_steps is 1-based here; step s sits in
+                        # chunk (s-1)//D)
+                        refill_chunks.add((st.decode_steps - 1)
+                                          // max(1, ro.decode_chunk))
 
         # early termination: evict in-flight partials back to the buffer
         for i in range(pool):
@@ -223,6 +238,10 @@ class RolloutSim:
         st.train_time = cl.train_time
         st.slot_utilization = (active_slot_steps / total_slot_steps
                                if total_slot_steps else 1.0)
+        # chunked device-side decode: the host sees one transfer per
+        # decode_chunk engine steps instead of one per step
+        st.decode_syncs = -(-st.decode_steps // max(1, self.ro.decode_chunk))
+        st.prefill_syncs += len(refill_chunks)
         self.stage += 1
         self._completed_groups = groups
         return st
@@ -230,6 +249,7 @@ class RolloutSim:
 
 def run_steps(mode: str, n_steps: int, *, concurrency: int = 512,
               batch_size: int = 64, group_size: int = 8,
+              decode_chunk: int = 8,
               cluster: Optional[ClusterModel] = None,
               lengths: Optional[LengthModel] = None, seed: int = 0):
     """Run n RL steps, return list of StepStats."""
@@ -237,6 +257,67 @@ def run_steps(mode: str, n_steps: int, *, concurrency: int = 512,
     lengths = lengths or LengthModel()
     ro = RolloutConfig(batch_size=batch_size, group_size=group_size,
                        concurrency=concurrency, mode=mode,
-                       max_response_len=lengths.max_len)
+                       max_response_len=lengths.max_len,
+                       decode_chunk=decode_chunk)
     sim = RolloutSim(ro, cluster, lengths, seed=seed)
     return [sim.run_step() for _ in range(n_steps)]
+
+
+# ---------------------------------------------------------------------------
+# CI smoke entry point: tiny sweep, machine-readable JSON artifact
+# ---------------------------------------------------------------------------
+
+
+def _smoke(n_steps: int, seed: int = 0) -> list:
+    rows = []
+    for mode, conc in [("sync", 0), ("copris", 256)]:
+        for chunk in (1, 8):
+            stats = run_steps(mode, n_steps, concurrency=conc,
+                              batch_size=16, group_size=4,
+                              decode_chunk=chunk, seed=seed)
+            gen = sum(s.generated_tokens for s in stats)
+            syncs = sum(s.host_syncs for s in stats)
+            rows.append(dict(
+                mode=mode, decode_chunk=chunk,
+                steps=n_steps,
+                step_time=sum(s.step_time for s in stats),
+                rollout_time=sum(s.rollout_time for s in stats),
+                generated_tokens=gen,
+                host_syncs=syncs,
+                syncs_per_1k_tokens=1000.0 * syncs / max(1, gen),
+                slot_utilization=float(
+                    sum(s.slot_utilization for s in stats) / len(stats)),
+                evicted=sum(s.evicted for s in stats),
+                resumed=sum(s.resumed for s in stats),
+            ))
+    return rows
+
+
+def main(argv=None) -> None:
+    import argparse
+    import json
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--steps", type=int, default=3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", default=None,
+                    help="write results to this path (default: stdout)")
+    args = ap.parse_args(argv)
+    rows = _smoke(args.steps, seed=args.seed)
+    blob = json.dumps({"rows": rows}, indent=2)
+    if args.json:
+        with open(args.json, "w") as f:
+            f.write(blob + "\n")
+        chunk1 = next(r for r in rows
+                      if r["mode"] == "copris" and r["decode_chunk"] == 1)
+        chunk8 = next(r for r in rows
+                      if r["mode"] == "copris" and r["decode_chunk"] == 8)
+        print(f"wrote {args.json}: copris syncs/1k-tok "
+              f"{chunk1['syncs_per_1k_tokens']:.2f} (chunk=1) -> "
+              f"{chunk8['syncs_per_1k_tokens']:.2f} (chunk=8)")
+    else:
+        print(blob)
+
+
+if __name__ == "__main__":
+    main()

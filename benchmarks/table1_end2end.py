@@ -57,20 +57,27 @@ def run_real_tiny(n_steps=4):
     cfg = get_config("tiny")
     params = M.init_params(jax.random.PRNGKey(0), cfg)
     out = {}
-    for mode, conc in [("sync", 0), ("copris", 32)]:
+    # decode_chunk sweep on the copris arm: same schedule, fewer host
+    # round-trips (the chunked-decode acceptance measurement)
+    for name, mode, conc, chunk in [("sync", "sync", 0, 8),
+                                    ("copris_chunk1", "copris", 32, 1),
+                                    ("copris", "copris", 32, 8)]:
         task = AdditionTask(max_value=50, seed=0)
         ro = RolloutConfig(batch_size=8, group_size=4, max_prompt_len=16,
-                           max_response_len=96, concurrency=conc, mode=mode)
+                           max_response_len=96, concurrency=conc, mode=mode,
+                           decode_chunk=chunk)
         eng = RolloutEngine(cfg, ro, task.sample_prompt, eos_id=EOS)
         # warm the jit caches before timing
         eng.collect(params, 0, jax.random.PRNGKey(99))
         t0 = time.perf_counter()
         trained_tokens = 0
+        syncs = 0
         for s in range(n_steps):
             groups, stats = eng.collect(params, s + 1, jax.random.PRNGKey(s))
             trained_tokens += sum(len(t.response_tokens)
                                   for g in groups for t in g.trajectories)
-        out[mode] = (time.perf_counter() - t0, trained_tokens)
+            syncs += stats["host_syncs"]
+        out[name] = (time.perf_counter() - t0, trained_tokens, syncs)
     return out
 
 
@@ -82,11 +89,16 @@ def main(rows_out):
                          f"speedup={sync_total/tot:.2f}x util={util:.2f} "
                          f"logp_share={logp/tot:.3f}"))
     real = run_real_tiny()
-    t_sync, g_sync = real["sync"]
-    t_cop, g_cop = real["copris"]
+    t_sync, g_sync, _ = real["sync"]
+    t_cop, g_cop, syncs_cop = real["copris"]
+    t_c1, g_c1, syncs_c1 = real["copris_chunk1"]
     thr_sync = g_sync / t_sync
     thr_cop = g_cop / t_cop
     rows_out.append(("table1_real_tiny_sync", t_sync * 1e6 / max(g_sync, 1),
                      f"tok_per_s={thr_sync:.1f}"))
     rows_out.append(("table1_real_tiny_copris", t_cop * 1e6 / max(g_cop, 1),
                      f"tok_per_s={thr_cop:.1f} speedup={thr_cop/thr_sync:.2f}x"))
+    sync_drop = (syncs_c1 / max(1, g_c1)) / max(1e-9, syncs_cop / max(1, g_cop))
+    rows_out.append(("table1_host_syncs_chunk8", float(syncs_cop),
+                     f"syncs_per_tok={syncs_cop/max(1,g_cop):.4f} "
+                     f"drop_vs_chunk1={sync_drop:.2f}x"))

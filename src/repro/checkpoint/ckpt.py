@@ -2,6 +2,9 @@
 
 Format: a zstd-compressed pickle of the pytree with every jax.Array converted
 to numpy (local trusted checkpoints only; no orbax in this environment).
+Falls back to zlib when ``zstandard`` is not installed — the two-byte magic
+prefix keeps the formats self-describing, so checkpoints written either way
+load either way (zstd files still need zstandard to decompress).
 Atomic write via rename. Save/restore round-trips exactly — verified by the
 resume integration test.
 """
@@ -10,11 +13,33 @@ from __future__ import annotations
 import os
 import pickle
 import tempfile
+import zlib
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import zstandard as zstd
+
+try:
+    import zstandard as zstd
+except ModuleNotFoundError:          # optional dep: degrade to stdlib zlib
+    zstd = None
+
+_ZSTD_MAGIC = b"\x28\xb5\x2f\xfd"    # zstd frame header (RFC 8878)
+
+
+def _compress(raw: bytes) -> bytes:
+    if zstd is not None:
+        return zstd.ZstdCompressor(level=3).compress(raw)
+    return zlib.compress(raw, 6)
+
+
+def _decompress(blob: bytes) -> bytes:
+    if blob[:4] == _ZSTD_MAGIC:
+        if zstd is None:
+            raise ModuleNotFoundError(
+                "checkpoint is zstd-compressed but zstandard is not installed")
+        return zstd.ZstdDecompressor().decompress(blob)
+    return zlib.decompress(blob)
 
 
 def _to_host(tree):
@@ -29,8 +54,7 @@ def save(path: str, tree) -> None:
     fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
     try:
         with os.fdopen(fd, "wb") as f:
-            f.write(zstd.ZstdCompressor(level=3).compress(
-                pickle.dumps(host, protocol=4)))
+            f.write(_compress(pickle.dumps(host, protocol=4)))
         os.replace(tmp, path)
     finally:
         if os.path.exists(tmp):
@@ -39,7 +63,7 @@ def save(path: str, tree) -> None:
 
 def load(path: str, *, to_device: bool = True):
     with open(path, "rb") as f:
-        tree = pickle.loads(zstd.ZstdDecompressor().decompress(f.read()))
+        tree = pickle.loads(_decompress(f.read()))
     if to_device:
         tree = jax.tree.map(lambda x: jnp.asarray(x) if isinstance(
             x, np.ndarray) else x, tree)

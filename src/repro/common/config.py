@@ -273,7 +273,20 @@ class RolloutConfig:
     concurrency: int = 1024            # N': fixed in-flight rollout requests
     mode: str = "copris"               # copris | naive_partial | sync
     resume_strategy: str = "reprefill"  # reprefill | kv_snapshot
-    decode_chunk: int = 1              # tokens per engine step per slot
+    # Device-side decode steps fused per engine step (one jitted lax.scan).
+    # The host sees one transfer per chunk instead of one per token; stop
+    # detection (EOS / length) runs on device and post-stop samples are
+    # trimmed by the host replay. 1 reproduces the step-wise engine.
+    decode_chunk: int = 8
+
+    def __post_init__(self):
+        if self.decode_chunk < 1:
+            raise ValueError(f"decode_chunk must be >= 1, got {self.decode_chunk}")
+        if self.mode not in ("copris", "naive_partial", "sync"):
+            raise ValueError(f"unknown rollout mode {self.mode!r}")
+        if self.resume_strategy not in ("reprefill", "kv_snapshot"):
+            raise ValueError(
+                f"unknown resume strategy {self.resume_strategy!r}")
 
 
 @dataclass(frozen=True)

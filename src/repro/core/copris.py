@@ -167,8 +167,13 @@ class CoPRISTrainer:
             reward_mean=float(batch["rewards"].mean()),
             reward_std=float(batch["rewards"].std()),
             rollout_time=roll_stats["wall_time"],
-            reward_time=t_reward - t0 - roll_stats["wall_time"],
+            # the reward worker's own gather timing: time the trainer spent
+            # blocked on reward resolution (subtracting rollout wall-time
+            # from a different clock span could go negative)
+            reward_time=self.reward_worker.last_gather_time,
             update_time=t_end - t_reward,
+            host_syncs=roll_stats["host_syncs"],
+            tokens_per_sync=roll_stats["tokens_per_sync"],
             step_time=t_end - t0,
             off_policy_frac=(roll_stats["off_policy_tokens"]
                              / max(1, roll_stats["generated"])),

@@ -14,6 +14,7 @@ thread pool keeps the JAX main thread free either way.
 """
 from __future__ import annotations
 
+import time
 from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Callable, Dict, List
 
@@ -27,6 +28,10 @@ class AsyncRewardWorker:
                                        thread_name_prefix="reward")
         self._pending: Dict[int, Future] = {}
         self.computed = 0
+        # wall-time the trainer actually SPENT blocked in the last gather —
+        # the synchronous cost of the reward stage (async work that finished
+        # during rollout costs the trainer nothing)
+        self.last_gather_time = 0.0
 
     # -- engine-side hook ------------------------------------------------
     def submit(self, traj: Trajectory, answer) -> None:
@@ -41,6 +46,7 @@ class AsyncRewardWorker:
         """Resolve rewards for every trajectory in ``groups`` (blocking on
         any still-running futures; computing inline for any the engine never
         submitted — e.g. sync mode without the hook). Returns #resolved."""
+        t0 = time.perf_counter()
         n = 0
         for g in groups:
             for t in g.trajectories:
@@ -54,6 +60,7 @@ class AsyncRewardWorker:
                         list(t.response_tokens), g.answer))
                 n += 1
         self.computed += n
+        self.last_gather_time = time.perf_counter() - t0
         return n
 
     def drop(self, traj_id: int) -> None:

@@ -1,11 +1,30 @@
 """Slot-pool rollout engine — Concurrency-Controlled Partial Rollout.
 
-TPU-native continuous batching (DESIGN.md §3): a fixed pool of ``N'`` slots,
-each slot owning a region of the batched KV/state cache. Every engine step
-runs ONE jitted decode over all N' slots; finished slots are refilled
-immediately by the :class:`ConcurrencyScheduler` (resume buffered partials
-first). Early termination fires when B groups are complete; in-flight
-trajectories stay in the buffer with their per-stage behaviour log-probs.
+TPU-native continuous batching (DESIGN.md §3) with CHUNKED DEVICE-SIDE
+DECODE: a fixed pool of ``N'`` slots, each slot owning a region of the
+batched KV/state cache. Every engine step runs ONE jitted
+``jax.lax.scan`` of ``decode_chunk`` decode+sample iterations over all N'
+slots; EOS / max-length stops are detected on device, so the host touches
+the device once per chunk — ``(tokens, logps, active)`` in a single
+transfer — instead of once per token. The host then *replays* the chunk in
+(step, slot) order: appending token runs to trajectories, trimming
+post-stop / post-termination over-generation, and refilling freed slots
+through ONE batched multi-slot prefill over a padded bucket (padding rows
+carry an out-of-bounds slot id and are dropped by the scatter). Early
+termination fires when B groups are complete; in-flight trajectories stay
+in the buffer with their per-stage behaviour log-probs.
+
+Sampling uses a **per-trajectory PRNG stream**: the key for response token
+``j`` of trajectory ``(group_id, sample_idx)`` is::
+
+    fold_in(fold_in(fold_in(stage_key, group_id), sample_idx), j)
+
+so the sampled stream is a pure function of the trajectory identity — not
+of slot assignment, batch composition, or chunk size. Any ``decode_chunk``
+therefore yields bit-identical trajectory content; only *timing* differs
+(refills land at chunk boundaries, so which trajectories early
+termination cuts off, and the trimmed over-generation accounting, may
+shift — measured in tests/test_rollout_chunked.py).
 
 Modes: "copris" | "sync" (the veRL-style baseline) | "naive_partial"
 (Kimi-K1.5-style one-shot over-generation).
@@ -35,6 +54,12 @@ def _round_up(n, m):
     return -(-n // m) * m
 
 
+def _fold_slot_keys(stage_key, gid, sidx):
+    """(pool,) group ids + sample indices -> (pool, 2) per-trajectory keys."""
+    k = jax.vmap(jax.random.fold_in, in_axes=(None, 0))(stage_key, gid)
+    return jax.vmap(jax.random.fold_in)(k, sidx)
+
+
 class RolloutEngine:
     def __init__(self, model_cfg: ModelConfig, ro_cfg: RolloutConfig,
                  prompt_source: Callable[[], Tuple[np.ndarray, object]], *,
@@ -54,45 +79,66 @@ class RolloutEngine:
                      if ro_cfg.mode == "sync" else ro_cfg.concurrency)
         self.max_len = max_len or _round_up(
             ro_cfg.max_prompt_len + ro_cfg.max_response_len, PREFILL_BUCKET)
+        self._chunk = ro_cfg.decode_chunk
 
         self.buffer = TrajectoryBuffer()
         self.cache = M.init_cache(model_cfg, self.pool, self.max_len)
         self.cache_len = np.zeros(self.pool, np.int32)
         self.last_token = np.zeros(self.pool, np.int32)
+        self.slot_gid = np.zeros(self.pool, np.int32)   # key-stream identity
+        self.slot_sidx = np.zeros(self.pool, np.int32)
         self.slots: List[Optional[Trajectory]] = [None] * self.pool
         self._group_counter = 0
-        self._step_counter = 0
         self.stats_total = {}
 
-        # ---- jitted engine step --------------------------------------
+        # ---- jitted engine steps -------------------------------------
+        def _sample_step(logits, cache_len, active, aux):
+            """Device-side sample + stop detection, mirroring _maybe_done:
+            after this token lands, resp == resp_len+1 and total ==
+            cache_len + 2 (cache_len is pre-increment here)."""
+            resp_len, slot_keys = aux
+            keys = jax.vmap(jax.random.fold_in)(slot_keys, resp_len)
+            tok, logp = sampler.sample_rows(
+                keys, logits, temperature=ro_cfg.temperature,
+                top_p=ro_cfg.top_p, top_k=ro_cfg.top_k)
+            resp_new = resp_len + active.astype(jnp.int32)
+            stop = ((tok == eos_id)
+                    | (resp_new >= ro_cfg.max_response_len)
+                    | (cache_len >= self.max_len - 3))
+            return tok, logp, stop, (resp_new, slot_keys)
+
         @functools.partial(jax.jit, donate_argnums=(1,))
-        def _decode(params, cache, tokens, cache_len, key):
-            logits, cache = M.decode_step(params, model_cfg, tokens, cache,
-                                          cache_len, media=self._media_for(self.pool),
-                                          use_pallas=use_pallas)
-            tok, logp = sampler.sample(key, logits,
-                                       temperature=ro_cfg.temperature,
-                                       top_p=ro_cfg.top_p, top_k=ro_cfg.top_k)
+        def _decode_chunk(params, cache, last_token, cache_len, active,
+                          resp_len, gid, sidx, stage_key):
+            slot_keys = _fold_slot_keys(stage_key, gid, sidx)
+            (cache, *_), ys = M.decode_scan(
+                params, model_cfg, cache, last_token, cache_len, active,
+                (resp_len, slot_keys), steps=self._chunk,
+                step_fn=_sample_step, media=self._media_for(self.pool),
+                use_pallas=use_pallas)
+            return cache, ys
+
+        @functools.partial(jax.jit, donate_argnums=(1,))
+        def _prefill_batch(params, cache, tokens, lengths, slot_ids, gid,
+                           sidx, resp_idx, stage_key):
+            # scratch is sized to the prompt bucket S, not max_len — a
+            # whole-pool initial fill must not transiently double the
+            # pool cache; insert_slots_prefix writes the S-long prefix
+            n, S = tokens.shape
+            scratch = M.init_cache(model_cfg, n, S)
+            logits, scratch = M.prefill(params, model_cfg, tokens, lengths,
+                                        scratch, media=self._media_for(n),
+                                        use_pallas=use_pallas)
+            keys = jax.vmap(jax.random.fold_in)(
+                _fold_slot_keys(stage_key, gid, sidx), resp_idx)
+            tok, logp = sampler.sample_rows(
+                keys, logits, temperature=ro_cfg.temperature,
+                top_p=ro_cfg.top_p, top_k=ro_cfg.top_k)
+            cache = kvc.insert_slots_prefix(cache, scratch, slot_ids)
             return tok, logp, cache
 
-        @functools.partial(jax.jit, donate_argnums=(1,),
-                           static_argnames=("pad_len",))
-        def _prefill_insert(params, cache, tokens, length, slot_id, key,
-                            pad_len):
-            del pad_len
-            scratch = M.init_cache(model_cfg, 1, self.max_len)
-            logits, scratch = M.prefill(params, model_cfg, tokens[None, :],
-                                        length[None], scratch,
-                                        media=self._media_for(1),
-                                        use_pallas=use_pallas)
-            tok, logp = sampler.sample(key, logits,
-                                       temperature=ro_cfg.temperature,
-                                       top_p=ro_cfg.top_p, top_k=ro_cfg.top_k)
-            cache = kvc.insert_slots(cache, scratch, slot_id[None])
-            return tok[0], logp[0], cache
-
-        self._decode = _decode
-        self._prefill_insert = _prefill_insert
+        self._decode_chunk_fn = _decode_chunk
+        self._prefill_batch_fn = _prefill_batch
 
     # ------------------------------------------------------------------
     def _media_for(self, batch):
@@ -108,50 +154,6 @@ class RolloutEngine:
         self._answers[g.group_id] = answer
         self._group_counter += 1
         return g
-
-    # ------------------------------------------------------------------
-    def _fill_slot(self, i: int, traj: Trajectory, params, key):
-        """(Re-)prefill ``traj`` into slot i.
-
-        resume_strategy="reprefill" (default, paper-faithful): re-prefill
-        prompt + partial response under the CURRENT policy — the K/V the
-        continuation attends to match the policy that will keep sampling.
-
-        resume_strategy="kv_snapshot": restore the evicted slot state
-        verbatim — no re-prefill cost, but after a policy update the
-        continuation attends to STALE K/V, so the effective behaviour
-        distribution is not any single policy's (bias/throughput tradeoff
-        the paper avoids by buffering tokens, not KV; measured in
-        tests/test_kv_snapshot.py)."""
-        if (self.ro.resume_strategy == "kv_snapshot"
-                and traj.kv_snapshot is not None):
-            self.cache = kvc.insert_slots(self.cache, traj.kv_snapshot,
-                                          jnp.asarray([i]))
-            self.slots[i] = traj
-            self.cache_len[i] = traj.snap_cache_len
-            self.last_token[i] = traj.snap_last_token
-            traj.kv_snapshot = None
-            self._stats["resumed"] += 1
-            self._stats["snapshot_resumes"] = \
-                self._stats.get("snapshot_resumes", 0) + 1
-            return
-        tokens = traj.full_tokens()
-        L = len(tokens)
-        assert L < self.max_len, f"trajectory length {L} >= max_len {self.max_len}"
-        pad_len = _round_up(L, PREFILL_BUCKET)
-        padded = np.zeros(pad_len, np.int32)
-        padded[:L] = tokens
-        tok, logp, self.cache = self._prefill_insert(
-            params, self.cache, jnp.asarray(padded), jnp.asarray(L, jnp.int32),
-            jnp.asarray(i, jnp.int32), key, pad_len=pad_len)
-        traj.append(int(tok), float(logp), self._stage)
-        self.slots[i] = traj
-        self.cache_len[i] = L
-        self.last_token[i] = int(tok)
-        self._stats["prefill_count"] += 1
-        self._stats["prefill_tokens"] += L
-        if traj.resume_count > 0 and len(traj.response_tokens) > 1:
-            self._stats["resumed"] += 1
 
     def _finish(self, traj: Trajectory, reason: str, sched: ConcurrencyScheduler):
         traj.done = True
@@ -169,74 +171,191 @@ class RolloutEngine:
             return "length"
         return None
 
+    # -- slot refill ---------------------------------------------------
+    def _resume_snapshot(self, i: int, traj: Trajectory):
+        """resume_strategy="kv_snapshot": restore the evicted slot state
+        verbatim — no re-prefill cost, but after a policy update the
+        continuation attends to STALE K/V, so the effective behaviour
+        distribution is not any single policy's (bias/throughput tradeoff
+        the paper avoids by buffering tokens, not KV; measured in
+        tests/test_kv_snapshot.py)."""
+        self.cache = kvc.insert_slots(self.cache, traj.kv_snapshot,
+                                      jnp.asarray([i]))
+        self.slots[i] = traj
+        self.cache_len[i] = traj.snap_cache_len
+        self.last_token[i] = traj.snap_last_token
+        self.slot_gid[i] = traj.group_id
+        self.slot_sidx[i] = traj.sample_idx
+        traj.kv_snapshot = None
+        self._stats["resumed"] += 1
+        self._stats["snapshot_resumes"] = \
+            self._stats.get("snapshot_resumes", 0) + 1
+
+    def _dispatch_refills(self, idxs, sched: ConcurrencyScheduler):
+        """Decide what fills freed slots, in slot order (one sequential
+        scheduler dispatch per slot, so scheduling policy is invariant to
+        the decode chunk size). kv_snapshot resumes are restored in place
+        (device scatter, no host sync); re-prefill trajectories are
+        returned as (slot, traj) pairs for the batched prefill."""
+        pending: List[Tuple[int, Trajectory]] = []
+        queue = list(idxs)
+        while queue and not sched.done:
+            batch = sched.next_requests(len(queue))
+            exhausted = len(batch) < len(queue)
+            redo = []
+            for i, traj in zip(queue, batch):
+                if (self.ro.resume_strategy == "kv_snapshot"
+                        and traj.kv_snapshot is not None):
+                    self._resume_snapshot(i, traj)
+                    reason = self._maybe_done(traj)
+                    if reason is not None:
+                        self._finish(traj, reason, sched)
+                        self.slots[i] = None
+                        sched.harvest()
+                        redo.append(i)
+                else:
+                    pending.append((i, traj))
+            queue = redo
+            if exhausted:
+                break
+        return pending
+
+    def _prefill_pending(self, pending, params, stage_key):
+        """ONE batched prefill over all freed slots: rows padded to a
+        common PREFILL_BUCKET length, row count padded to a power of two
+        (padding rows scatter to the out-of-bounds slot id ``pool`` and
+        are dropped). Returns the rows that finished immediately (their
+        very first sampled token already ended the trajectory)."""
+        fulls = [t.full_tokens() for _, t in pending]
+        lens = [len(f) for f in fulls]
+        for L in lens:
+            assert L < self.max_len, \
+                f"trajectory length {L} >= max_len {self.max_len}"
+        S = _round_up(max(lens), PREFILL_BUCKET)
+        nb = 1 << (len(pending) - 1).bit_length()
+        tokens = np.zeros((nb, S), np.int32)
+        lengths = np.ones(nb, np.int32)
+        slot_ids = np.full(nb, self.pool, np.int32)   # OOB rows -> dropped
+        gid = np.zeros(nb, np.int32)
+        sidx = np.zeros(nb, np.int32)
+        resp_idx = np.zeros(nb, np.int32)
+        for r, ((i, traj), f, L) in enumerate(zip(pending, fulls, lens)):
+            tokens[r, :L] = f
+            lengths[r] = L
+            slot_ids[r] = i
+            gid[r] = traj.group_id
+            sidx[r] = traj.sample_idx
+            resp_idx[r] = traj.response_len
+        tok, logp, self.cache = self._prefill_batch_fn(
+            params, self.cache, jnp.asarray(tokens),
+            jnp.asarray(lengths), jnp.asarray(slot_ids), jnp.asarray(gid),
+            jnp.asarray(sidx), jnp.asarray(resp_idx), stage_key)
+        tok, logp = jax.device_get((tok, logp))
+        self._stats["prefill_calls"] += 1
+        self._stats["host_syncs"] += 1
+        finished = []
+        for r, (i, traj) in enumerate(pending):
+            traj.append(int(tok[r]), float(logp[r]), self._stage)
+            self.slots[i] = traj
+            self.cache_len[i] = lens[r]
+            self.last_token[i] = int(tok[r])
+            self.slot_gid[i] = traj.group_id
+            self.slot_sidx[i] = traj.sample_idx
+            self._stats["prefill_count"] += 1
+            self._stats["prefill_tokens"] += lens[r]
+            if traj.resume_count > 0 and traj.response_len > 1:
+                self._stats["resumed"] += 1
+            reason = self._maybe_done(traj)
+            if reason:
+                finished.append((i, traj, reason))
+        return finished
+
+    def _prefill_rounds(self, pending, sched: ConcurrencyScheduler, params,
+                        stage_key):
+        """Batched prefill, iterated: a prefill's very first sampled token
+        may already be EOS, freeing the slot again. Dispatched work is
+        prefilled even if early termination fired mid-chunk — the step-wise
+        engine prefills at dispatch time, so these become 1-token partials
+        that eviction buffers for prioritized resumption (rather than
+        silently un-dispatching them)."""
+        while pending:
+            finished = self._prefill_pending(pending, params, stage_key)
+            freed = []
+            for i, traj, reason in finished:
+                self._finish(traj, reason, sched)
+                self.slots[i] = None
+                freed.append(i)
+            pending = []
+            if freed:
+                sched.harvest()
+                pending = self._dispatch_refills(freed, sched)
+
     # ------------------------------------------------------------------
     def collect(self, params, stage_id: int, key) -> Tuple[List[Group], dict]:
         """Run rollout until B complete groups are collected (early
         termination). Returns (groups, stats)."""
         self._stage = stage_id
-        self._stats = dict(prefill_count=0, prefill_tokens=0, decode_steps=0,
+        self._stats = dict(prefill_count=0, prefill_tokens=0, prefill_calls=0,
+                           decode_steps=0, decode_chunks=0, host_syncs=0,
                            active_slot_steps=0, slot_steps=0, generated=0,
-                           resumed=0, evicted=0)
+                           overgen_tokens=0, resumed=0, evicted=0)
         t0 = time.perf_counter()
         sched = ConcurrencyScheduler(self.ro, self.buffer, self._new_group)
         if self.ro.mode == "sync":
             assert len(self.buffer) == 0, "sync mode must start with empty buffer"
 
-        def refill(i, key):
-            # loop: a prefill's very first sampled token may already be EOS
-            n = 0
-            while not sched.done:
-                traj = sched.next_request()
-                if traj is None:
-                    self.slots[i] = None
-                    return
-                self._fill_slot(i, traj, params, jax.random.fold_in(key, n))
-                n += 1
-                reason = self._maybe_done(traj)
-                if reason is None:
-                    return
-                self._finish(traj, reason, sched)
-                self.slots[i] = None
-                sched.harvest()
+        # initial fill: one batched prefill over the whole pool
+        self._prefill_rounds(
+            self._dispatch_refills(range(self.pool), sched), sched,
+            params, key)
 
-        # initial fill
-        for i in range(self.pool):
-            if self.slots[i] is None and not sched.done:
-                refill(i, jax.random.fold_in(key, self._step_counter * self.pool + i))
-
+        D = self._chunk
         while not sched.done:
-            active = [i for i, t in enumerate(self.slots) if t is not None]
-            if not active:
-                break                      # nothing in flight and scheduler idle
-            self._step_counter += 1
-            k = jax.random.fold_in(key, 2_000_000_000 + self._step_counter)
-            tok, logp, self.cache = self._decode(
+            live = np.array([t is not None for t in self.slots], bool)
+            if not live.any():
+                break                  # nothing in flight and scheduler idle
+            resp_len = np.array([0 if t is None else t.response_len
+                                 for t in self.slots], np.int32)
+            self.cache, ys = self._decode_chunk_fn(
                 params, self.cache, jnp.asarray(self.last_token),
-                jnp.asarray(self.cache_len), k)
-            tok = np.asarray(tok)
-            logp = np.asarray(logp)
-            self._stats["decode_steps"] += 1
-            self._stats["slot_steps"] += self.pool
-            self._stats["active_slot_steps"] += len(active)
-            for i in active:
-                self.cache_len[i] += 1
-            freed = []
-            for i in active:
-                traj = self.slots[i]
-                traj.append(int(tok[i]), float(logp[i]), stage_id)
-                self.last_token[i] = int(tok[i])
-                self._stats["generated"] += 1
-                reason = self._maybe_done(traj)
-                if reason:
-                    self._finish(traj, reason, sched)
-                    self.slots[i] = None
-                    freed.append(i)
-            if freed:
-                sched.harvest()
-                for i in freed:
-                    if not sched.done:
-                        refill(i, jax.random.fold_in(
-                            key, 1_000_000_000 + self._step_counter * self.pool + i))
+                jnp.asarray(self.cache_len), jnp.asarray(live),
+                jnp.asarray(resp_len), jnp.asarray(self.slot_gid),
+                jnp.asarray(self.slot_sidx), key)
+            toks, logps, was_active = jax.device_get(ys)   # ONE transfer
+            self._stats["decode_chunks"] += 1
+            self._stats["host_syncs"] += 1
+            self._stats["decode_steps"] += D
+            self._stats["slot_steps"] += D * self.pool
+
+            # host replay of the chunk, in (step, slot) order
+            pending = []
+            for d in range(D):
+                if sched.done or not live.any():
+                    self._stats["overgen_tokens"] += int(was_active[d:].sum())
+                    break
+                assert np.array_equal(was_active[d], live), \
+                    "device/host stop detection desynchronised"
+                step_live = np.nonzero(live)[0]
+                self._stats["active_slot_steps"] += len(step_live)
+                freed = []
+                for i in step_live:
+                    i = int(i)
+                    traj = self.slots[i]
+                    self.cache_len[i] += 1
+                    tok = int(toks[d, i])
+                    traj.append(tok, float(logps[d, i]), stage_id)
+                    self.last_token[i] = tok
+                    self._stats["generated"] += 1
+                    reason = self._maybe_done(traj)
+                    if reason:
+                        self._finish(traj, reason, sched)
+                        self.slots[i] = None
+                        live[i] = False
+                        freed.append(i)
+                if freed:
+                    sched.harvest()
+                    pending.extend(self._dispatch_refills(freed, sched))
+            self._prefill_rounds(pending, sched, params, key)
 
         # early termination: evict in-flight work back to the buffer
         for i, traj in enumerate(self.slots):
@@ -262,6 +381,7 @@ class RolloutEngine:
         st["buffer_waiting"] = self.buffer.num_finished_waiting
         st["utilization"] = (st["active_slot_steps"] / st["slot_steps"]
                              if st["slot_steps"] else 1.0)
+        st["tokens_per_sync"] = st["generated"] / max(1, st["host_syncs"])
         n_traj = sum(len(g.trajectories) for g in groups)
         st["off_policy_tokens"] = sum(t.off_policy_tokens
                                       for g in groups for t in g.trajectories)

@@ -74,6 +74,19 @@ class ConcurrencyScheduler:
             self.in_flight.add(t.traj_id)
         return t
 
+    def next_requests(self, k: int) -> List[Trajectory]:
+        """Dispatch up to ``k`` requests for ``k`` freed slots (the chunked
+        engine refills whole batches at chunk boundaries). Dispatch order is
+        identical to ``k`` sequential :meth:`next_request` calls, so the
+        scheduling policy is invariant to the decode chunk size."""
+        out: List[Trajectory] = []
+        for _ in range(k):
+            t = self.next_request()
+            if t is None:
+                break
+            out.append(t)
+        return out
+
     def release(self, traj: Trajectory):
         """Slot freed (trajectory finished or evicted at stage end)."""
         self.in_flight.discard(traj.traj_id)

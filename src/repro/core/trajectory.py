@@ -51,6 +51,10 @@ class Trajectory:
         return sum(1 for s in self.stage_ids if s != last)
 
     @property
+    def response_len(self) -> int:
+        return len(self.response_tokens)
+
+    @property
     def total_len(self) -> int:
         return len(self.prompt_tokens) + len(self.response_tokens)
 
@@ -63,6 +67,15 @@ class Trajectory:
         self.response_tokens.append(int(token))
         self.behaviour_logps.append(float(logp))
         self.stage_ids.append(int(stage))
+
+    def append_run(self, tokens, logps, stage: int):
+        """Append a run of same-stage tokens (a decoded chunk's worth)."""
+        assert not self.done, "appending to a finished trajectory"
+        n = len(tokens)
+        assert len(logps) == n, "token/logp run length mismatch"
+        self.response_tokens.extend(int(t) for t in tokens)
+        self.behaviour_logps.extend(float(l) for l in logps)
+        self.stage_ids.extend([int(stage)] * n)
 
     def check_invariants(self):
         assert len(self.response_tokens) == len(self.behaviour_logps) \

@@ -1,3 +1,5 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+# (Pallas-only version shims live in _compat.py, NOT here: this
+# __init__ runs for the pure-jnp reference imports too.)

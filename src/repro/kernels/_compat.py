@@ -1,0 +1,13 @@
+"""Version-compat shims for the Pallas kernel modules ONLY.
+
+Kept out of the package __init__ so the pure-jnp reference paths
+(repro.kernels.*.ref) never import pallas-TPU — exactly the builds where
+the experimental module may fail to import are the ones that need the
+references to keep working.
+"""
+from jax.experimental.pallas import tpu as _pltpu
+
+# jax renamed pltpu.TPUCompilerParams -> pltpu.CompilerParams; kernels
+# import this alias so both API generations compile.
+CompilerParams = getattr(_pltpu, "CompilerParams", None) \
+    or _pltpu.TPUCompilerParams

@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams
+
 NEG_INF = -1e30
 
 
@@ -112,7 +114,7 @@ def decode_attention_kernel(q, k_cache, v_cache, cache_len, *, window=0,
             pltpu.VMEM((rep, 1), jnp.float32),
             pltpu.VMEM((rep, hd), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(lens, qg, kg, vg)

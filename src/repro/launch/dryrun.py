@@ -272,6 +272,8 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
     # the scan-over-layers programs need the trip-count-aware HLO walker.
     # We record both: raw XLA numbers as a cross-check, walker as primary.
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):     # older jaxlib: one dict per device
+        cost = cost[0] if cost else {}
     hlo_text = compiled.as_text()
     walked = parse_hlo_cost(hlo_text)
     flops = float(walked["flops"])

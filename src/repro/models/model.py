@@ -180,3 +180,40 @@ def decode_step(params, cfg: ModelConfig, token, cache, cache_len, *,
                                mode="decode", use_pallas=use_pallas)
     logits = _logits(params, cfg, x)[:, 0]
     return logits, new_cache
+
+
+def decode_scan(params, cfg: ModelConfig, cache, last_token, cache_len,
+                active, aux, *, steps: int, step_fn, media=None,
+                use_pallas=False):
+    """Run ``steps`` fused decode+sample iterations entirely on device.
+
+    One ``jax.lax.scan`` over :func:`decode_step`; the caller supplies the
+    sampling / stop policy::
+
+        step_fn(logits, cache_len, active, aux) -> (tok, logp, stop, aux')
+
+    where ``logits (B, V)`` are this step's next-token logits, ``cache_len``
+    is the PRE-increment per-slot cache length and ``stop (B,) bool`` marks
+    slots that must freeze after consuming ``tok``. Slots with
+    ``active == False`` still flow through the batched decode (their state is
+    frozen: no cache_len advance, last_token held) — identical to the
+    step-wise engine's treatment of idle slots.
+
+    Returns ``((cache, last_token, cache_len, active, aux), ys)`` with
+    ``ys = (tokens (steps, B), logps (steps, B), was_active (steps, B))``;
+    ``was_active[d]`` is the active mask entering step ``d`` — the host uses
+    it to trim post-stop (over-generated) samples.
+    """
+    def body(carry, _):
+        cache, last_tok, clen, act, a = carry
+        logits, cache = decode_step(params, cfg, last_tok, cache, clen,
+                                    media=media, use_pallas=use_pallas)
+        tok, logp, stop, a = step_fn(logits, clen, act, a)
+        clen = clen + act.astype(clen.dtype)
+        last_tok = jnp.where(act, tok.astype(last_tok.dtype), last_tok)
+        ys = (tok, logp, act)
+        act = jnp.logical_and(act, jnp.logical_not(stop))
+        return (cache, last_tok, clen, act, a), ys
+
+    return jax.lax.scan(body, (cache, last_token, cache_len, active, aux),
+                        None, length=steps)

@@ -31,11 +31,38 @@ def _map_with_axis(fn, cache, *rest):
 @functools.partial(jax.jit, donate_argnums=(0,))
 def insert_slots(cache, new_cache, slot_ids):
     """Scatter ``new_cache`` (batch = len(slot_ids)) into ``cache`` at
-    ``slot_ids`` along the slot axis."""
+    ``slot_ids`` along the slot axis.
+
+    Out-of-bounds ids are DROPPED (mode="drop"): the batched multi-slot
+    prefill pads its row count up to a bucket and marks padding rows with
+    slot_id == pool, so one compiled scatter serves any number of freed
+    slots without touching live state."""
     def upd(axis, big, small):
         if axis == 0:
-            return big.at[slot_ids].set(small.astype(big.dtype))
-        return big.at[:, slot_ids].set(small.astype(big.dtype))  # (R, n, ...)
+            return big.at[slot_ids].set(small.astype(big.dtype), mode="drop")
+        return big.at[:, slot_ids].set(small.astype(big.dtype),  # (R, n, ...)
+                                       mode="drop")
+    return _map_with_axis(upd, cache, new_cache)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def insert_slots_prefix(cache, new_cache, slot_ids):
+    """Like :func:`insert_slots`, but ``new_cache`` may carry a SHORTER
+    length axis — a prefill scratch sized to the prompt bucket S instead of
+    max_len, so a whole-pool batched prefill never materialises a second
+    pool-sized cache. Only the first S positions of each length axis are
+    written; positions beyond S keep stale data from the slot's previous
+    occupant, which is safe because decode writes position c before any
+    step attends it (write-before-read along the length axis, masked by
+    cache_len). Out-of-bounds slot ids are dropped.
+    """
+    def upd(axis, big, small):
+        sl = [slice(None)] * big.ndim
+        sl[axis] = slot_ids
+        for d in range(big.ndim):
+            if d != axis and big.shape[d] != small.shape[d]:
+                sl[d] = slice(0, small.shape[d])   # length axis prefix
+        return big.at[tuple(sl)].set(small.astype(big.dtype), mode="drop")
     return _map_with_axis(upd, cache, new_cache)
 
 

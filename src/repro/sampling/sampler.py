@@ -8,6 +8,8 @@ generated them, and the cross-stage IS ratio at training time is
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 
@@ -38,7 +40,7 @@ def sample(key, logits, *, temperature: float = 1.0, top_p: float = 1.0,
            top_k: int = -1):
     """logits: (B, V) fp32. Returns (tokens (B,), logps (B,)) where logps are
     log-probabilities under the (tempered, truncated) sampling distribution.
-    temperature == 0 -> greedy."""
+    temperature == 0 -> greedy. One key drives the whole batch."""
     if temperature <= 0.0:
         tok = jnp.argmax(logits, axis=-1)
         return tok, jnp.zeros(tok.shape, jnp.float32)
@@ -49,3 +51,31 @@ def sample(key, logits, *, temperature: float = 1.0, top_p: float = 1.0,
     logp = jax.nn.log_softmax(l, axis=-1)
     lp = jnp.take_along_axis(logp, tok[:, None], axis=-1)[:, 0]
     return tok, lp
+
+
+def _sample_row(key, logits, *, temperature: float, top_p: float, top_k: int):
+    """logits: (V,). Single-row variant of :func:`sample`."""
+    if temperature <= 0.0:
+        tok = jnp.argmax(logits, axis=-1)
+        return tok, jnp.zeros((), jnp.float32)
+    l = logits / temperature
+    l = _apply_top_k(l, top_k)
+    l = _apply_top_p(l, top_p)
+    tok = jax.random.categorical(key, l)
+    logp = jax.nn.log_softmax(l, axis=-1)
+    return tok, logp[tok]
+
+
+def sample_rows(keys, logits, *, temperature: float = 1.0, top_p: float = 1.0,
+                top_k: int = -1):
+    """Batched sampling with an INDEPENDENT key per row.
+
+    keys: (B, 2) uint32 raw PRNG keys; logits: (B, V) fp32. Row i's draw is a
+    pure function of (keys[i], logits[i]) — independent of the batch
+    composition — which is what makes the rollout engine's chunked decode
+    produce identical token streams for any decode_chunk and any slot
+    assignment (per-trajectory key streams, folded per token index).
+    """
+    fn = functools.partial(_sample_row, temperature=temperature, top_p=top_p,
+                           top_k=top_k)
+    return jax.vmap(fn)(keys, logits)

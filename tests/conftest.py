@@ -4,12 +4,65 @@ import os
 # in a subprocess); keep XLA quiet and deterministic
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
+import sys
+import types
+
 import jax
 import pytest
-from hypothesis import settings
 
-settings.register_profile("ci", max_examples=25, deadline=None)
-settings.load_profile("ci")
+try:
+    from hypothesis import settings
+
+    settings.register_profile("ci", max_examples=25, deadline=None)
+    settings.load_profile("ci")
+except ModuleNotFoundError:
+    # Degrade gracefully when the [test] extra is not installed: property
+    # tests SKIP with a clear message instead of crashing collection.
+    # Module-level strategy construction (st.integers(...), st.composite,
+    # .map/.filter chains) returns inert placeholders; @given replaces the
+    # test with a zero-arg skipper so pytest never looks for fixtures named
+    # after strategy parameters.
+    class _Strategy:
+        def __call__(self, *a, **k):
+            return self
+
+        def __getattr__(self, name):
+            return self
+
+    def _given(*a, **k):
+        def deco(fn):
+            def skipper():
+                pytest.skip("hypothesis not installed — "
+                            "`pip install -e .[test]` to run property tests")
+            skipper.__name__ = fn.__name__
+            skipper.__doc__ = fn.__doc__
+            return skipper
+        return deco
+
+    class _Settings:
+        def __init__(self, *a, **k):
+            pass
+
+        def __call__(self, fn):
+            return fn
+
+        @staticmethod
+        def register_profile(*a, **k):
+            pass
+
+        @staticmethod
+        def load_profile(*a, **k):
+            pass
+
+    _stub = types.ModuleType("hypothesis")
+    _stub.given = _given
+    _stub.settings = _Settings
+    _stub.strategies = _Strategy()
+    _stub.HealthCheck = _Strategy()
+    _stub.assume = lambda *a, **k: True
+    _stub.note = lambda *a, **k: None
+    sys.modules["hypothesis"] = _stub
+    sys.modules["hypothesis.strategies"] = _stub.strategies
 
 
 @pytest.fixture(scope="session")
@@ -17,5 +70,4 @@ def rng():
     return jax.random.PRNGKey(0)
 
 
-def pytest_configure(config):
-    config.addinivalue_line("markers", "slow: long-running integration test")
+# slow/pallas markers are registered in pyproject.toml [tool.pytest.ini_options]

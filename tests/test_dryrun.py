@@ -65,7 +65,10 @@ def test_sharding_rules_all_archs():
     from repro.launch import sharding as shd
     from repro.models import model as M
 
-    mesh = AbstractMesh((16, 16), ("data", "model"))
+    try:
+        mesh = AbstractMesh((16, 16), ("data", "model"))
+    except TypeError:   # older jax: AbstractMesh(((name, size), ...))
+        mesh = AbstractMesh((("data", 16), ("model", 16)))
     for arch in ASSIGNED_ARCHS:
         cfg = get_config(arch)
         shape = jax.eval_shape(lambda k: M.init_params(k, cfg),

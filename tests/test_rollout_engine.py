@@ -48,7 +48,12 @@ def test_collect_returns_complete_groups(setup):
             if t.finish_reason == "eos":
                 assert t.response_tokens[-1] == EOS
     assert stats["generated"] > 0
-    assert stats["utilization"] > 0.9
+    # chunked decode refills slots only at chunk boundaries, so utilization
+    # includes intra-chunk idling; decode_chunk=1 stays >0.9 (see
+    # test_rollout_chunked.py which asserts that) while the host-sync count
+    # drops by ~decode_chunk here
+    assert stats["utilization"] > 0.5
+    assert stats["tokens_per_sync"] > 1.0
 
 
 def test_behaviour_logps_match_generating_policy(setup):
