@@ -247,6 +247,23 @@ class RolloutSim:
         return st
 
 
+def overlap_wall(stats) -> float:
+    """Wall-clock of the same step sequence under the one-step-async
+    overlapped pipeline: the train step (+ carried-token logp recompute)
+    for step k runs while the rollout (+prefill) of step k+1 collects, so
+    each pipeline slot costs max(train_k, rollout_{k+1}) instead of their
+    sum. Sequential wall is sum(s.step_time)."""
+    if not stats:
+        return 0.0
+    roll = [s.rollout_time + s.prefill_time for s in stats]
+    train = [s.train_time + s.logp_time for s in stats]
+    total = roll[0]                       # pipeline prologue: first rollout
+    for k in range(len(stats)):
+        nxt = roll[k + 1] if k + 1 < len(stats) else 0.0
+        total += max(train[k], nxt)
+    return total
+
+
 def run_steps(mode: str, n_steps: int, *, concurrency: int = 512,
               batch_size: int = 64, group_size: int = 8,
               decode_chunk: int = 8,
@@ -277,11 +294,14 @@ def _smoke(n_steps: int, seed: int = 0) -> list:
                               decode_chunk=chunk, seed=seed)
             gen = sum(s.generated_tokens for s in stats)
             syncs = sum(s.host_syncs for s in stats)
-            rows.append(dict(
-                mode=mode, decode_chunk=chunk,
+            seq_time = sum(s.step_time for s in stats)
+            row = dict(
+                mode=mode, decode_chunk=chunk, overlap=False,
                 steps=n_steps,
-                step_time=sum(s.step_time for s in stats),
-                rollout_time=sum(s.rollout_time for s in stats),
+                step_time=seq_time,
+                rollout_time=sum(s.rollout_time + s.prefill_time
+                                 for s in stats),
+                update_time=sum(s.train_time + s.logp_time for s in stats),
                 generated_tokens=gen,
                 host_syncs=syncs,
                 syncs_per_1k_tokens=1000.0 * syncs / max(1, gen),
@@ -289,7 +309,14 @@ def _smoke(n_steps: int, seed: int = 0) -> list:
                     sum(s.slot_utilization for s in stats) / len(stats)),
                 evicted=sum(s.evicted for s in stats),
                 resumed=sum(s.resumed for s in stats),
-            ))
+            )
+            rows.append(row)
+            if mode == "copris" and chunk == 8:
+                # one-step-async overlapped pipeline on the same schedule:
+                # train(k) hides behind rollout(k+1)
+                ov = overlap_wall(stats)
+                rows.append(dict(row, overlap=True, step_time=ov,
+                                 overlap_saved_time=seq_time - ov))
     return rows
 
 
@@ -309,12 +336,28 @@ def main(argv=None) -> None:
         with open(args.json, "w") as f:
             f.write(blob + "\n")
         chunk1 = next(r for r in rows
-                      if r["mode"] == "copris" and r["decode_chunk"] == 1)
+                      if r["mode"] == "copris" and r["decode_chunk"] == 1
+                      and not r["overlap"])
         chunk8 = next(r for r in rows
-                      if r["mode"] == "copris" and r["decode_chunk"] == 8)
+                      if r["mode"] == "copris" and r["decode_chunk"] == 8
+                      and not r["overlap"])
+        ov = next(r for r in rows if r["overlap"])
+        # CI acceptance: the overlapped pipeline must beat the sequential
+        # rollout+update sum — a degenerate schedule fails the smoke here
+        # instead of silently shipping a useless artifact. A single-step
+        # run has no neighbouring stage to hide the train step behind
+        # (overlap_wall == rollout + update exactly), so only multi-step
+        # runs can assert a strict win.
+        if args.steps >= 2:
+            assert (ov["step_time"]
+                    < chunk8["rollout_time"] + chunk8["update_time"]), \
+                f"overlap did not save time: {ov}"
         print(f"wrote {args.json}: copris syncs/1k-tok "
               f"{chunk1['syncs_per_1k_tokens']:.2f} (chunk=1) -> "
-              f"{chunk8['syncs_per_1k_tokens']:.2f} (chunk=8)")
+              f"{chunk8['syncs_per_1k_tokens']:.2f} (chunk=8); "
+              f"overlap step_time {chunk8['step_time']:.0f} -> "
+              f"{ov['step_time']:.0f} "
+              f"(saved {ov['overlap_saved_time']:.0f})")
     else:
         print(blob)
 

@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.sim import ClusterModel, LengthModel, run_steps
+from benchmarks.sim import ClusterModel, LengthModel, overlap_wall, run_steps
 
 # service constants calibrated so the simulated concurrency ablation matches
 # the paper's Table 2 ordering (N'=1024 optimal, 512 under-utilised, 2048
@@ -36,6 +36,13 @@ def simulate(n_steps=10, seed=0):
                      sum(s.rollout_time for s in ss),
                      sum(s.logp_time for s in ss),
                      np.mean([s.slot_utilization for s in ss])))
+        if mode == "copris":
+            # one-step-async overlapped pipeline on the same schedule: the
+            # train step for stage k hides behind the rollout of stage k+1
+            rows.append(("copris_overlap", conc, overlap_wall(ss),
+                         sum(s.rollout_time for s in ss),
+                         sum(s.logp_time for s in ss),
+                         np.mean([s.slot_utilization for s in ss])))
     return rows
 
 

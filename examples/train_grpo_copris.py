@@ -4,6 +4,9 @@ the same CLI scales from `tiny` to any assigned arch (use --smoke for CPU).
 
     PYTHONPATH=src python examples/train_grpo_copris.py            # tiny, 60 steps
     PYTHONPATH=src python examples/train_grpo_copris.py --steps 300
+    # one-step-async pipeline: rollout overlaps the optimizer step, the
+    # cross-stage IS correction absorbs the one-update staleness
+    PYTHONPATH=src python examples/train_grpo_copris.py --overlap
 """
 import sys
 

@@ -309,6 +309,24 @@ class TrainConfig:
     microbatches: int = 1
     remat: bool = True
     seed: int = 0
+    # --- overlapped (one-step async) pipeline ---
+    # overlap=True runs rollout on a background thread: while the train step
+    # for batch k executes, the engine already collects batch k+1 under an
+    # immutable snapshot of the freshest published params. Tokens carry the
+    # snapshot's stage id, so the existing cross-stage IS correction absorbs
+    # the one-step staleness. overlap=False is bit-identical to the
+    # sequential trainer (same per-trajectory PRNG streams).
+    overlap: bool = False
+    # Max optimizer updates the training step may be ahead of the params
+    # that generated the batch it consumes (pipeline depth). 1 = classic
+    # one-step async; the producer blocks rather than exceed it.
+    max_staleness: int = 1
+
+    def __post_init__(self):
+        if self.max_staleness < 1:
+            raise ValueError(
+                f"max_staleness must be >= 1 (got {self.max_staleness}); "
+                "0 would deadlock the overlapped pipeline")
 
 
 @dataclass(frozen=True)

@@ -80,10 +80,12 @@ class TrajectoryBuffer:
                 t.check_invariants()
         return out
 
-    def off_policy_token_fraction(self) -> float:
+    def off_policy_token_fraction(self, stage: int) -> float:
+        """Fraction of buffered tokens older than ``stage`` (the stage that
+        would consume them next)."""
         tok = off = 0
         for g in self._groups.values():
             for t in g.trajectories:
                 tok += len(t.response_tokens)
-                off += t.off_policy_tokens
+                off += t.off_policy_tokens(stage)
         return off / tok if tok else 0.0

@@ -6,13 +6,30 @@ function is lowered by launch/dryrun.py on the production mesh — what we
 dry-run is what we train.
 
 ``CoPRISTrainer`` drives the full RL loop on a live model (the CPU-scale
-end-to-end example and the integration tests).
+end-to-end example and the integration tests). Two pipelines share one code
+path:
+
+* ``overlap=False`` — the sequential loop: collect → reward-gather → train,
+  bit-identical to the historical trainer (same per-trajectory PRNG
+  streams, same stage stamps).
+* ``overlap=True`` — one-step async (the Laminar / ROLL-Flash style overlap
+  on top of partial rollout): a background producer thread runs
+  ``RolloutEngine.collect`` against an immutable snapshot of the freshest
+  published params while the consumer (``step``) trains on the previous
+  collected batch. Tokens carry the snapshot's stage id, so the existing
+  cross-stage IS correction absorbs the staleness; ``max_staleness`` bounds
+  how many optimizer updates the training step may be ahead of the params
+  that generated its batch. The producer owns the engine (and therefore the
+  donated KV cache) exclusively.
 """
 from __future__ import annotations
 
 import functools
+import queue
+import threading
 import time
-from typing import Optional
+from dataclasses import dataclass, field
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -92,7 +109,6 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, *, use_pallas=False):
                 msum = jax.tree.map(jnp.add, msum, metrics)
                 return (gsum, msum), None
 
-            zero_g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
             mb0 = jax.tree.map(lambda a: a[0], mbs)
             (_, metrics0), g0 = grad_fn(params, mb0)
             (gsum, msum), _ = jax.lax.scan(
@@ -113,8 +129,47 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, *, use_pallas=False):
 # ---------------------------------------------------------------------------
 
 
+@dataclass
+class _StageBatch:
+    """One collected rollout stage, in flight between producer and consumer."""
+
+    collect_idx: int        # 0-based index of this collect within the run
+    params_version: int     # trainer.stage baked into the rollout params
+    groups: List = field(default_factory=list)
+    roll_stats: dict = field(default_factory=dict)
+
+
+class ThreadSafeTask:
+    """Serialises ``sample_prompt`` against the rollout producer thread.
+
+    Tasks draw prompts from a numpy ``Generator``, which is NOT thread-safe;
+    with ``overlap=True`` the producer samples prompts continuously while the
+    main thread may run ``evaluate``/pass@k on the same task. Everything else
+    (``reward`` etc.) passes through untouched — rewards must already be
+    pure/concurrent-safe for the async reward pool.
+    """
+
+    def __init__(self, task, lock: threading.Lock):
+        self._task = task
+        self._lock = lock
+
+    def sample_prompt(self):
+        with self._lock:
+            return self._task.sample_prompt()
+
+    def __getattr__(self, name):
+        return getattr(self._task, name)
+
+
 class CoPRISTrainer:
-    """Full RL loop on live hardware (CPU-scale models)."""
+    """Full RL loop on live hardware (CPU-scale models).
+
+    With ``tcfg.overlap`` a background producer thread owns the rollout
+    engine and feeds ``step()`` through a bounded queue; ``close()`` (or
+    the context-manager exit) shuts the pipeline down. ``overlap=False``
+    runs the identical logic inline and reproduces the historical
+    sequential trainer bit-for-bit.
+    """
 
     def __init__(self, model_cfg: ModelConfig, ro_cfg: RolloutConfig,
                  tcfg: TrainConfig, task, *, eos_id: int, key=None,
@@ -123,60 +178,216 @@ class CoPRISTrainer:
         self.ro = ro_cfg
         self.tcfg = tcfg
         self.task = task
+        # all trainer-originated sample_prompt calls go through this proxy
+        # (producer thread during overlapped rollout, main thread during
+        # evaluate) — hand it to external eval helpers too
+        self.safe_task = ThreadSafeTask(task, threading.Lock())
         key = key if key is not None else jax.random.PRNGKey(tcfg.seed)
         self.key, k_init = jax.random.split(key)
         self.params = params if params is not None else M.init_params(k_init, model_cfg)
         self.opt_state = adam.init(self.params)
         from repro.core.reward_worker import AsyncRewardWorker
         self.reward_worker = AsyncRewardWorker(task.reward)
-        self.engine = RolloutEngine(model_cfg, ro_cfg, task.sample_prompt,
+        self.engine = RolloutEngine(model_cfg, ro_cfg,
+                                    self.safe_task.sample_prompt,
                                     eos_id=eos_id, use_pallas=use_pallas,
                                     on_finish=self.reward_worker.submit)
         self._train_step = jax.jit(make_train_step(model_cfg, tcfg,
                                                    use_pallas=use_pallas))
         self.stage = 0
         self.history = []
+        self.last_groups: List = []
+        self.last_batch: Optional[dict] = None
+
+        # ---- overlapped-pipeline state -------------------------------
+        self.overlap = tcfg.overlap
+        self.max_staleness = tcfg.max_staleness
+        # how long step() may wait on the producer before declaring the
+        # pipeline wedged (None = wait forever; tests set a finite value)
+        self.batch_timeout: Optional[float] = None
+        self._param_lock = threading.Lock()   # (params, opt_state, stage)
+        self._progress = threading.Condition()
+        self._batches: "queue.Queue[_StageBatch]" = queue.Queue(
+            maxsize=self.max_staleness + 1)
+        self._producer: Optional[threading.Thread] = None
+        self._producer_exc: Optional[BaseException] = None
+        self._collect_idx = 0                 # next collect, producer-owned
+        self._trained_batches = 0             # consumed collects
+        self._stop = threading.Event()
+        self._closed = False
+
+    # ------------------------------------------------------------------
+    # rollout production (caller thread when sequential, producer thread
+    # when overlapped — never both, so self.key stays single-owner)
+    # ------------------------------------------------------------------
+    def _next_rollout_key(self):
+        self.key, k = jax.random.split(self.key)
+        return k
+
+    def _snapshot_params(self):
+        """Immutable (params, version) pair for the rollout side. jax
+        arrays are immutable, so holding the reference is safe while the
+        consumer publishes fresh trees."""
+        with self._param_lock:
+            return self.params, self.stage
+
+    def _collect_stage(self, params, version: int, idx: int) -> _StageBatch:
+        k_roll = self._next_rollout_key()
+        groups, roll_stats = self.engine.collect(params, version, k_roll)
+        return _StageBatch(collect_idx=idx, params_version=version,
+                           groups=groups, roll_stats=roll_stats)
+
+    def _producer_loop(self):
+        try:
+            while not self._stop.is_set():
+                idx = self._collect_idx
+                # staleness gate: collect ``idx`` trains as the ``idx``-th
+                # consumed batch, so its params snapshot may lag the
+                # training stage by at most max_staleness updates
+                with self._progress:
+                    while (self._trained_batches < idx - self.max_staleness
+                           and not self._stop.is_set()):
+                        self._progress.wait(timeout=0.1)
+                if self._stop.is_set():
+                    return
+                params, version = self._snapshot_params()
+                item = self._collect_stage(params, version, idx)
+                self._collect_idx = idx + 1
+                while not self._stop.is_set():
+                    try:
+                        self._batches.put(item, timeout=0.1)
+                        break
+                    except queue.Full:
+                        continue
+        except BaseException as e:           # surfaced by _next_batch
+            self._producer_exc = e
+
+    def _ensure_producer(self):
+        if self._closed:
+            raise RuntimeError("trainer is closed")
+        if self._producer is None:
+            self._producer = threading.Thread(target=self._producer_loop,
+                                              name="copris-rollout",
+                                              daemon=True)
+            self._producer.start()
+
+    def _next_batch(self) -> _StageBatch:
+        deadline = (None if self.batch_timeout is None
+                    else time.perf_counter() + self.batch_timeout)
+        while True:
+            try:
+                return self._batches.get(timeout=0.2)
+            except queue.Empty:
+                pass
+            if self._producer_exc is not None:
+                raise RuntimeError("rollout producer failed") \
+                    from self._producer_exc
+            if self._producer is not None and not self._producer.is_alive():
+                raise RuntimeError("rollout producer exited without a batch")
+            if deadline is not None and time.perf_counter() > deadline:
+                raise TimeoutError(
+                    f"no rollout batch within {self.batch_timeout}s — "
+                    "overlapped pipeline wedged?")
 
     # ------------------------------------------------------------------
     def step(self) -> dict:
+        """One training step. Sequential mode collects inline; overlapped
+        mode consumes the producer's next batch (collected under params up
+        to ``max_staleness`` updates behind the ones being trained)."""
         t0 = time.perf_counter()
-        self.key, k_roll = jax.random.split(self.key)
-        groups, roll_stats = self.engine.collect(self.params, self.stage, k_roll)
+        if self.overlap:
+            self._ensure_producer()
+            item = self._next_batch()
+        else:
+            params, version = self.params, self.stage
+            item = self._collect_stage(params, version, self._collect_idx)
+            self._collect_idx += 1
+        t_collected = time.perf_counter()
+        out = self._train_on(item, t0, t_collected)
+        self.history.append(out)
+        return out
 
+    def _train_on(self, item: _StageBatch, t0: float,
+                  t_collected: float) -> dict:
+        groups, roll_stats = item.groups, item.roll_stats
         # rewards were computed asynchronously during rollout (paper §5.1:
-        # async rewards on both arms); gather resolves any stragglers
+        # async rewards on both arms); gather resolves any stragglers and
+        # runs on the CONSUMER thread, so the producer keeps submitting
+        # stage k+1 rewards while stage k gathers
         self.reward_worker.gather(groups)
         t_reward = time.perf_counter()
 
+        train_stage = self.stage
         batch = pack_groups(groups, max_len=self.engine.max_len)
         adv = grpo.group_advantages(
             jnp.asarray(batch["rewards"]), self.ro.group_size)
         jb = {k: jnp.asarray(v) for k, v in batch.items()
               if k in ("tokens", "response_mask", "behaviour_logp")}
         jb["advantages"] = adv
-        lr = schedule.warmup_constant(jnp.asarray(self.stage, jnp.float32),
+        lr = schedule.warmup_constant(jnp.asarray(train_stage, jnp.float32),
                                       lr=self.tcfg.lr,
                                       warmup_steps=self.tcfg.warmup_steps)
-        self.params, self.opt_state, metrics = self._train_step(
+        new_params, new_opt, metrics = self._train_step(
             self.params, self.opt_state, jb, lr)
+        # publish atomically for the producer's snapshot, then wake its
+        # staleness gate
+        with self._param_lock:
+            self.params, self.opt_state = new_params, new_opt
+            self.stage = train_stage + 1
+        with self._progress:
+            self._trained_batches += 1
+            self._progress.notify_all()
+        # jit dispatch is async: without forcing completion here, t_end
+        # excludes the train compute (and, overlapped, its contention with
+        # the producer's rollout on a shared device) — step_time/update_time
+        # would under-report and overlap_saved_time overstate. Publish
+        # happens BEFORE the block so the producer's gate opens on the
+        # future-backed params as early as possible.
+        jax.block_until_ready((new_params, metrics))
         t_end = time.perf_counter()
 
+        # staleness accounting relative to the CONSUMING training stage:
+        # gap = train_stage - token's stage id (satellite fix — a partial
+        # finished entirely under stage k-1 but trained at stage k counts
+        # all its tokens as off-policy)
+        stages_arr = batch["stage_ids"]
+        resp = stages_arr >= 0
+        n_resp = int(resp.sum())
+        gaps = (train_stage - stages_arr)[resp]
+        staleness_hist = {int(g): int(c) for g, c in
+                          zip(*np.unique(gaps, return_counts=True))}
+        off_tokens = int((gaps > 0).sum())
+
         out = {k: float(v) for k, v in metrics.items()}
+        rollout_time = roll_stats["wall_time"]
+        update_time = t_end - t_reward
+        reward_time = self.reward_worker.last_gather_time
+        step_time = t_end - t0
         out.update(
-            step=self.stage,
+            step=train_stage,
             reward_mean=float(batch["rewards"].mean()),
             reward_std=float(batch["rewards"].std()),
-            rollout_time=roll_stats["wall_time"],
+            rollout_time=rollout_time,
             # the reward worker's own gather timing: time the trainer spent
             # blocked on reward resolution (subtracting rollout wall-time
             # from a different clock span could go negative)
-            reward_time=self.reward_worker.last_gather_time,
-            update_time=t_end - t_reward,
+            reward_time=reward_time,
+            update_time=update_time,
             host_syncs=roll_stats["host_syncs"],
             tokens_per_sync=roll_stats["tokens_per_sync"],
-            step_time=t_end - t0,
-            off_policy_frac=(roll_stats["off_policy_tokens"]
-                             / max(1, roll_stats["generated"])),
+            step_time=step_time,
+            off_policy_frac=off_tokens / max(1, n_resp),
+            staleness_hist=staleness_hist,
+            # optimizer updates between the batch's rollout params and the
+            # params trained on it: 0 sequentially, <= max_staleness overlapped
+            param_staleness=train_stage - item.params_version,
+            batch_wait_time=(t_collected - t0 if self.overlap else 0.0),
+            # what the sequential pipeline would have paid on top of this
+            # step's wall-clock (rollout ran concurrently with the previous
+            # train step)
+            overlap_saved_time=(max(0.0, rollout_time + reward_time
+                                    + update_time - step_time)
+                                if self.overlap else 0.0),
             multi_stage_trajs=roll_stats["multi_stage_trajs"],
             utilization=roll_stats["utilization"],
             buffer_unfinished=roll_stats["buffer_unfinished"],
@@ -184,32 +395,60 @@ class CoPRISTrainer:
                                          for g in groups
                                          for t in g.trajectories])),
         )
-        self.stage += 1
-        self.history.append(out)
+        self.last_groups = groups
+        self.last_batch = batch
         return out
+
+    # ------------------------------------------------------------------
+    def close(self):
+        """Stop the producer thread and the reward pool. Idempotent; only
+        needed for ``overlap=True`` but always safe to call."""
+        if self._closed:
+            return
+        self._closed = True
+        self._stop.set()
+        with self._progress:
+            self._progress.notify_all()
+        if self._producer is not None:
+            # drain so a blocked put() observes the stop flag
+            while self._producer.is_alive():
+                try:
+                    self._batches.get_nowait()
+                except queue.Empty:
+                    pass
+                self._producer.join(timeout=0.2)
+        self.reward_worker.shutdown()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
 
     # ------------------------------------------------------------------
     def evaluate(self, n_prompts: int = 32, *, key=None) -> float:
         """Greedy accuracy on fresh task prompts (exact reward)."""
-        from repro.core.trajectory import Group
         key = key if key is not None else jax.random.PRNGKey(123)
+        eos_id = self.engine.eos_id    # the id rollout/training stopped on
+        params, _ = self._snapshot_params()
         correct = 0.0
         for i in range(n_prompts):
             cache = M.init_cache(self.cfg, 1, self.engine.max_len)
-            prompt, answer = self.task.sample_prompt()
+            prompt, answer = self.safe_task.sample_prompt()
             L = len(prompt)
             pad = np.zeros(-(-L // 16) * 16, np.int32)
             pad[:L] = prompt
-            logits, cache = M.prefill(self.params, self.cfg,
+            logits, cache = M.prefill(params, self.cfg,
                                       jnp.asarray(pad)[None], jnp.asarray([L]),
                                       cache)
             toks, cl = [], L
             tok = int(jnp.argmax(logits[0]))
             for _ in range(32):
                 toks.append(tok)
-                if tok == getattr(self.task, "eos_id", 13):
+                if tok == eos_id:
                     break
-                lg, cache = M.decode_step(self.params, self.cfg,
+                lg, cache = M.decode_step(params, self.cfg,
                                           jnp.asarray([tok]), cache,
                                           jnp.asarray([cl]))
                 cl += 1

@@ -57,12 +57,18 @@ def pack_groups(groups: List[Group], *, pad_multiple: int = 64,
         P = len(t.prompt_tokens)
         L = len(full)
         tokens[n, :L] = full
-        prompt_lens[n] = P
+        # max_len truncation guard: a prompt at/over the truncated T leaves
+        # no response room (R <= 0). Keep the row — its reward still feeds
+        # the group-advantage baseline — with an empty response region
+        # instead of slicing behaviour_logps by a negative index, and clamp
+        # prompt_lens so P <= L holds for every packed row.
+        prompt_lens[n] = min(P, L)
         total_lens[n] = L
-        R = L - P
-        response_mask[n, P:L] = 1.0
-        behaviour[n, P:L] = np.asarray(t.behaviour_logps[:R], np.float32)
-        stages[n, P:L] = np.asarray(t.stage_ids[:R], np.int32)
+        R = max(L - P, 0)
+        if R:
+            response_mask[n, P:L] = 1.0
+            behaviour[n, P:L] = np.asarray(t.behaviour_logps[:R], np.float32)
+            stages[n, P:L] = np.asarray(t.stage_ids[:R], np.int32)
         rewards[n] = 0.0 if t.reward is None else t.reward
         group_index[n] = t.group_id
 

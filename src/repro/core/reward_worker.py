@@ -11,9 +11,15 @@ calls ``gather`` once the batch is collected — by then most rewards are
 already done. Rule-based math rewards are microseconds, so the win here is
 architectural (the hook is where a slow verifier/RM would plug in); the
 thread pool keeps the JAX main thread free either way.
+
+Under the overlapped trainer, ``submit`` (rollout thread, stage k+1) and
+``gather`` (train thread, stage k) run concurrently: the pending map is
+lock-protected, and ``gather`` never holds the lock while blocking on a
+future, so gathering stage k can never stall stage k+1 submissions.
 """
 from __future__ import annotations
 
+import threading
 import time
 from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Callable, Dict, List
@@ -27,6 +33,7 @@ class AsyncRewardWorker:
         self.pool = ThreadPoolExecutor(max_workers=max_workers,
                                        thread_name_prefix="reward")
         self._pending: Dict[int, Future] = {}
+        self._lock = threading.Lock()      # guards _pending only
         self.computed = 0
         # wall-time the trainer actually SPENT blocked in the last gather —
         # the synchronous cost of the reward stage (async work that finished
@@ -35,24 +42,30 @@ class AsyncRewardWorker:
 
     # -- engine-side hook ------------------------------------------------
     def submit(self, traj: Trajectory, answer) -> None:
-        """Called by the rollout engine when a trajectory finishes."""
-        if traj.traj_id in self._pending or traj.reward is not None:
-            return
-        self._pending[traj.traj_id] = self.pool.submit(
-            self.reward_fn, list(traj.response_tokens), answer)
+        """Called by the rollout engine when a trajectory finishes. Never
+        blocks on an in-progress ``gather`` (executor submission is a queue
+        push; the pending-map lock is only held for the dict update)."""
+        with self._lock:
+            if traj.traj_id in self._pending or traj.reward is not None:
+                return
+            self._pending[traj.traj_id] = self.pool.submit(
+                self.reward_fn, list(traj.response_tokens), answer)
 
     # -- trainer-side ------------------------------------------------------
     def gather(self, groups: List[Group]) -> int:
         """Resolve rewards for every trajectory in ``groups`` (blocking on
         any still-running futures; computing inline for any the engine never
-        submitted — e.g. sync mode without the hook). Returns #resolved."""
+        submitted — e.g. sync mode without the hook). Returns #resolved.
+        Waits on futures OUTSIDE the pending-map lock, so a concurrent
+        rollout stage keeps submitting while this stage resolves."""
         t0 = time.perf_counter()
         n = 0
         for g in groups:
             for t in g.trajectories:
                 if t.reward is not None:
                     continue
-                fut = self._pending.pop(t.traj_id, None)
+                with self._lock:
+                    fut = self._pending.pop(t.traj_id, None)
                 if fut is not None:
                     t.reward = float(fut.result())
                 else:
@@ -64,7 +77,8 @@ class AsyncRewardWorker:
         return n
 
     def drop(self, traj_id: int) -> None:
-        f = self._pending.pop(traj_id, None)
+        with self._lock:
+            f = self._pending.pop(traj_id, None)
         if f is not None:
             f.cancel()
 

@@ -32,6 +32,7 @@ Modes: "copris" | "sync" (the veRL-style baseline) | "naive_partial"
 from __future__ import annotations
 
 import functools
+import threading
 import time
 from typing import Callable, List, Optional, Tuple
 
@@ -58,6 +59,27 @@ def _fold_slot_keys(stage_key, gid, sidx):
     """(pool,) group ids + sample indices -> (pool, 2) per-trajectory keys."""
     k = jax.vmap(jax.random.fold_in, in_axes=(None, 0))(stage_key, gid)
     return jax.vmap(jax.random.fold_in)(k, sidx)
+
+
+def stop_flags(tok, resp_len_after, total_len_after, *, eos_id: int,
+               max_response_len: int, max_len: int):
+    """THE stop predicate — one definition shared by the device sampler
+    (`_sample_step`) and the host replay (`_maybe_done`), so the two sides
+    cannot drift apart and trip the desync assert.
+
+    Evaluated on *post-append* quantities: ``resp_len_after`` /
+    ``total_len_after`` count the token ``tok`` that just landed. The
+    total-length bound stops at ``max_len - 1`` so the next decode step never
+    writes K/V past cache capacity. Works elementwise on jnp arrays (device)
+    and on python ints (host).
+
+    Returns ``(eos_stop, length_stop)`` — the host reports EOS with
+    priority when both fire on the same token.
+    """
+    eos = tok == eos_id
+    length = ((resp_len_after >= max_response_len)
+              | (total_len_after >= max_len - 1))
+    return eos, length
 
 
 class RolloutEngine:
@@ -90,22 +112,30 @@ class RolloutEngine:
         self.slots: List[Optional[Trajectory]] = [None] * self.pool
         self._group_counter = 0
         self.stats_total = {}
+        # the engine OWNS its donated KV cache: _decode_chunk/_prefill_batch
+        # donate it, so a second concurrent collect would consume a buffer
+        # the first one already invalidated. The overlapped trainer drives
+        # collect from a single producer thread; this guard turns any
+        # accidental re-entry into a loud error instead of a use-after-free.
+        self._collect_guard = threading.Lock()
 
         # ---- jitted engine steps -------------------------------------
         def _sample_step(logits, cache_len, active, aux):
-            """Device-side sample + stop detection, mirroring _maybe_done:
-            after this token lands, resp == resp_len+1 and total ==
-            cache_len + 2 (cache_len is pre-increment here)."""
+            """Device-side sample + stop detection via the SAME predicate as
+            the host's _maybe_done (`stop_flags`). Slot invariant entering a
+            step: cache_len == prompt + resp_len - 1, so after this token
+            lands resp == resp_len+1 and total == cache_len + 2."""
             resp_len, slot_keys = aux
             keys = jax.vmap(jax.random.fold_in)(slot_keys, resp_len)
             tok, logp = sampler.sample_rows(
                 keys, logits, temperature=ro_cfg.temperature,
                 top_p=ro_cfg.top_p, top_k=ro_cfg.top_k)
             resp_new = resp_len + active.astype(jnp.int32)
-            stop = ((tok == eos_id)
-                    | (resp_new >= ro_cfg.max_response_len)
-                    | (cache_len >= self.max_len - 3))
-            return tok, logp, stop, (resp_new, slot_keys)
+            eos, length = stop_flags(
+                tok, resp_new, cache_len + 2, eos_id=eos_id,
+                max_response_len=ro_cfg.max_response_len,
+                max_len=self.max_len)
+            return tok, logp, eos | length, (resp_new, slot_keys)
 
         @functools.partial(jax.jit, donate_argnums=(1,))
         def _decode_chunk(params, cache, last_token, cache_len, active,
@@ -163,11 +193,15 @@ class RolloutEngine:
         sched.release(traj)
 
     def _maybe_done(self, traj: Trajectory) -> Optional[str]:
-        if traj.response_tokens and traj.response_tokens[-1] == self.eos_id:
+        if not traj.response_tokens:
+            return None
+        eos, length = stop_flags(
+            traj.response_tokens[-1], traj.response_len, traj.total_len,
+            eos_id=self.eos_id, max_response_len=self.ro.max_response_len,
+            max_len=self.max_len)
+        if eos:
             return "eos"
-        if len(traj.response_tokens) >= self.ro.max_response_len:
-            return "length"
-        if traj.total_len >= self.max_len - 1:
+        if length:
             return "length"
         return None
 
@@ -293,7 +327,23 @@ class RolloutEngine:
     # ------------------------------------------------------------------
     def collect(self, params, stage_id: int, key) -> Tuple[List[Group], dict]:
         """Run rollout until B complete groups are collected (early
-        termination). Returns (groups, stats)."""
+        termination). Returns (groups, stats).
+
+        ``params`` is treated as an immutable snapshot: it is never donated
+        (only the engine-owned cache is), so the caller may keep training on
+        a newer params tree concurrently. ``collect`` itself is single-owner
+        — it must only ever run on one thread at a time (see
+        ``_collect_guard``)."""
+        if not self._collect_guard.acquire(blocking=False):
+            raise RuntimeError(
+                "RolloutEngine.collect re-entered: the engine owns its "
+                "donated KV cache and must be driven from a single thread")
+        try:
+            return self._collect(params, stage_id, key)
+        finally:
+            self._collect_guard.release()
+
+    def _collect(self, params, stage_id: int, key) -> Tuple[List[Group], dict]:
         self._stage = stage_id
         self._stats = dict(prefill_count=0, prefill_tokens=0, prefill_calls=0,
                            decode_steps=0, decode_chunks=0, host_syncs=0,
@@ -379,12 +429,26 @@ class RolloutEngine:
         st["wall_time"] = time.perf_counter() - t0
         st["buffer_unfinished"] = self.buffer.num_unfinished
         st["buffer_waiting"] = self.buffer.num_finished_waiting
+        # how stale the carried-over buffer already is for the NEXT stage —
+        # the overlapped pipeline's leading indicator of IS-correction load
+        st["buffer_off_policy_frac"] = \
+            self.buffer.off_policy_token_fraction(stage_id + 1)
         st["utilization"] = (st["active_slot_steps"] / st["slot_steps"]
                              if st["slot_steps"] else 1.0)
         st["tokens_per_sync"] = st["generated"] / max(1, st["host_syncs"])
         n_traj = sum(len(g.trajectories) for g in groups)
-        st["off_policy_tokens"] = sum(t.off_policy_tokens
-                                      for g in groups for t in g.trajectories)
+        # off-policy accounting relative to THIS collect's stage (the stage
+        # about to consume the batch), plus a per-stage-gap histogram —
+        # {gap: token count} where gap = stage_id - token's stage. Under the
+        # overlapped trainer the training stage may be ahead of stage_id;
+        # the trainer re-derives its histogram against the train stage.
+        all_stages = [np.asarray(t.stage_ids, np.int32)
+                      for g in groups for t in g.trajectories]
+        gaps, counts = np.unique(
+            stage_id - np.concatenate(all_stages) if all_stages
+            else np.empty(0, np.int32), return_counts=True)
+        st["stage_gap_hist"] = {int(g_): int(c) for g_, c in zip(gaps, counts)}
+        st["off_policy_tokens"] = int(counts[gaps > 0].sum())
         st["multi_stage_trajs"] = sum(1 for g in groups for t in g.trajectories
                                       if t.num_stages > 1)
         st["batch_trajs"] = n_traj

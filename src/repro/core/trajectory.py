@@ -42,13 +42,14 @@ class Trajectory:
     def num_stages(self) -> int:
         return len(set(self.stage_ids))
 
-    @property
-    def off_policy_tokens(self) -> int:
-        """Tokens generated under a stage older than the latest one present."""
-        if not self.stage_ids:
-            return 0
-        last = max(self.stage_ids)
-        return sum(1 for s in self.stage_ids if s != last)
+    def off_policy_tokens(self, stage: int) -> int:
+        """Tokens sampled under a policy version older than ``stage`` — the
+        stage consuming this trajectory (the collect stage for rollout stats,
+        the training stage for the train batch). Counting against the
+        consumer, not the trajectory's own latest stage, means a partial that
+        finished entirely under stage k-1 but trains at stage k reports ALL
+        its tokens as off-policy — exactly what the IS correction sees."""
+        return sum(1 for s in self.stage_ids if s < stage)
 
     @property
     def response_len(self) -> int:

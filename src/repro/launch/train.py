@@ -40,6 +40,12 @@ def main(argv=None):
     ap.add_argument("--lr", type=float, default=2e-4)
     ap.add_argument("--no-is", action="store_true",
                     help="disable cross-stage IS correction (ablation)")
+    ap.add_argument("--overlap", action="store_true",
+                    help="one-step-async pipeline: rollout for stage k+1 "
+                         "runs on a background thread while stage k trains")
+    ap.add_argument("--max-staleness", type=int, default=1,
+                    help="max optimizer updates the train step may be ahead "
+                         "of the params that generated its batch")
     ap.add_argument("--sft-warmup", type=int, default=150)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="runs/default")
@@ -68,37 +74,46 @@ def main(argv=None):
                        max_prompt_len=16, max_response_len=args.max_response,
                        concurrency=args.concurrency, mode=args.mode)
     tc = TrainConfig(lr=args.lr, warmup_steps=5, total_steps=args.steps,
-                     use_is_correction=not args.no_is, seed=args.seed)
+                     use_is_correction=not args.no_is, seed=args.seed,
+                     overlap=args.overlap, max_staleness=args.max_staleness)
     tr = CoPRISTrainer(cfg, ro, tc, task, eos_id=EOS, params=params)
     if args.resume:
         tr.opt_state = state["opt_state"]
         tr.stage = state["stage"]
 
     mpath = os.path.join(args.out, "metrics.jsonl")
-    with open(mpath, "a") as mf:
-        for i in range(args.steps):
-            out = tr.step()
-            mf.write(json.dumps(out) + "\n")
-            mf.flush()
-            if i % 5 == 0:
-                print(f"step {out['step']:4d} reward={out['reward_mean']:.3f} "
-                      f"loss={out['pg_loss']:+.4f} ratio={out['ratio_mean']:.3f} "
-                      f"off={out['off_policy_frac']:.2f} "
-                      f"t={out['step_time']:.1f}s")
-            if args.eval_every and (i + 1) % args.eval_every == 0:
-                from repro.eval.passk import evaluate as eval_passk
-                acc = tr.evaluate(n_prompts=16)
-                pk = eval_passk(tr.params, cfg, task, eos_id=EOS,
-                                n_prompts=8, samples_per_prompt=8,
-                                max_response=args.max_response, ks=(1, 8))
-                print(f"  eval@{out['step']}: greedy {acc:.3f} "
-                      f"pass@1 {pk['pass@1']:.3f} pass@8 {pk['pass@8']:.3f}")
-            if (i + 1) % args.ckpt_every == 0:
-                p = os.path.join(args.out, f"ckpt_{tr.stage}.zpkl")
-                ckpt.save(p, {"params": tr.params, "opt_state": tr.opt_state,
-                              "stage": tr.stage})
-                print(f"  saved {p}")
-    print("final eval:", tr.evaluate(n_prompts=32))
+    try:
+        with open(mpath, "a") as mf:
+            for i in range(args.steps):
+                out = tr.step()
+                mf.write(json.dumps(out) + "\n")
+                mf.flush()
+                if i % 5 == 0:
+                    stale = (f" stale={out['param_staleness']}"
+                             f" saved={out['overlap_saved_time']:.1f}s"
+                             if args.overlap else "")
+                    print(f"step {out['step']:4d} reward={out['reward_mean']:.3f} "
+                          f"loss={out['pg_loss']:+.4f} ratio={out['ratio_mean']:.3f} "
+                          f"off={out['off_policy_frac']:.2f} "
+                          f"t={out['step_time']:.1f}s{stale}")
+                if args.eval_every and (i + 1) % args.eval_every == 0:
+                    from repro.eval.passk import evaluate as eval_passk
+                    acc = tr.evaluate(n_prompts=16)
+                    # safe_task serialises prompt sampling against the
+                    # overlapped trainer's background rollout thread
+                    pk = eval_passk(tr.params, cfg, tr.safe_task, eos_id=EOS,
+                                    n_prompts=8, samples_per_prompt=8,
+                                    max_response=args.max_response, ks=(1, 8))
+                    print(f"  eval@{out['step']}: greedy {acc:.3f} "
+                          f"pass@1 {pk['pass@1']:.3f} pass@8 {pk['pass@8']:.3f}")
+                if (i + 1) % args.ckpt_every == 0:
+                    p = os.path.join(args.out, f"ckpt_{tr.stage}.zpkl")
+                    ckpt.save(p, {"params": tr.params, "opt_state": tr.opt_state,
+                                  "stage": tr.stage})
+                    print(f"  saved {p}")
+        print("final eval:", tr.evaluate(n_prompts=32))
+    finally:
+        tr.close()
 
 
 if __name__ == "__main__":

@@ -1,0 +1,258 @@
+"""Overlapped (one-step async) trainer pipeline.
+
+* overlap=False must reproduce the historical sequential trainer
+  bit-identically (same per-trajectory PRNG streams, same packed batches,
+  same updated params) — the regression anchor for the refactor;
+* overlap=True is a producer/consumer pipeline: convergence smoke on the
+  tiny config plus staleness accounting (every token's stage id <= the
+  consuming training stage; the params snapshot lags by <= max_staleness);
+* trainer-level satellite regressions: evaluate() stops on the ENGINE's
+  eos_id, not a task attribute (or the old hard-coded 13).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.common.config import RolloutConfig, TrainConfig
+from repro.configs import get_config
+from repro.core import grpo
+from repro.core.copris import CoPRISTrainer, make_train_step
+from repro.core.importance import pack_groups
+from repro.core.reward_worker import AsyncRewardWorker
+from repro.core.rollout import RolloutEngine
+from repro.data.tasks import AdditionTask, EOS
+from repro.models import model as M
+from repro.optim import adam, schedule
+
+CFG = get_config("tiny")
+RO = dict(batch_size=4, group_size=2, max_prompt_len=16, max_response_len=12,
+          concurrency=8, mode="copris")
+TC = dict(lr=2e-4, warmup_steps=2, microbatches=1)
+N_STEPS = 4
+
+
+@pytest.fixture(scope="module")
+def init_params():
+    return M.init_params(jax.random.PRNGKey(0), CFG)
+
+
+def _trainer(params, *, overlap, max_staleness=1, seed=0):
+    task = AdditionTask(max_value=9, seed=seed)
+    ro = RolloutConfig(**RO)
+    tc = TrainConfig(**TC, overlap=overlap, max_staleness=max_staleness,
+                     seed=seed)
+    return CoPRISTrainer(CFG, ro, tc, task, eos_id=EOS,
+                         params=jax.tree.map(jnp.copy, params))
+
+
+def _traj_keys(groups):
+    return [(g.group_id, t.sample_idx, tuple(t.response_tokens),
+             tuple(t.behaviour_logps), tuple(t.stage_ids))
+            for g in groups for t in g.trajectories]
+
+
+def _reference_run(params, n_steps, seed=0):
+    """The pre-overlap sequential trainer loop, inlined verbatim: split key
+    per step, collect under CURRENT params stamped with the train stage,
+    gather rewards, pack, GRPO+AdamW update."""
+    task = AdditionTask(max_value=9, seed=seed)
+    ro = RolloutConfig(**RO)
+    tc = TrainConfig(**TC, seed=seed)
+    key = jax.random.PRNGKey(tc.seed)
+    key, _k_init = jax.random.split(key)
+    params = jax.tree.map(jnp.copy, params)
+    opt_state = adam.init(params)
+    worker = AsyncRewardWorker(task.reward)
+    engine = RolloutEngine(CFG, ro, task.sample_prompt, eos_id=EOS,
+                           on_finish=worker.submit)
+    train_step = jax.jit(make_train_step(CFG, tc))
+    outs = []
+    for stage in range(n_steps):
+        key, k_roll = jax.random.split(key)
+        groups, _ = engine.collect(params, stage, k_roll)
+        worker.gather(groups)
+        batch = pack_groups(groups, max_len=engine.max_len)
+        adv = grpo.group_advantages(jnp.asarray(batch["rewards"]),
+                                    ro.group_size)
+        jb = {k: jnp.asarray(v) for k, v in batch.items()
+              if k in ("tokens", "response_mask", "behaviour_logp")}
+        jb["advantages"] = adv
+        lr = schedule.warmup_constant(jnp.asarray(stage, jnp.float32),
+                                      lr=tc.lr, warmup_steps=tc.warmup_steps)
+        params, opt_state, metrics = train_step(params, opt_state, jb, lr)
+        outs.append(dict(trajs=_traj_keys(groups),
+                         rewards=np.asarray(batch["rewards"]).copy(),
+                         pg_loss=float(metrics["pg_loss"]),
+                         ratio_mean=float(metrics["ratio_mean"])))
+    return params, outs
+
+
+# ---------------------------------------------------------------------------
+# overlap=False bit-identity
+# ---------------------------------------------------------------------------
+
+
+def test_overlap_off_bit_identity_with_sequential_loop(init_params):
+    ref_params, ref = _reference_run(init_params, N_STEPS)
+    tr = _trainer(init_params, overlap=False)
+    for i in range(N_STEPS):
+        out = tr.step()
+        assert _traj_keys(tr.last_groups) == ref[i]["trajs"], f"step {i}"
+        np.testing.assert_array_equal(
+            np.asarray(tr.last_batch["rewards"]), ref[i]["rewards"])
+        assert out["pg_loss"] == ref[i]["pg_loss"], f"step {i}"
+        assert out["ratio_mean"] == ref[i]["ratio_mean"], f"step {i}"
+        assert out["param_staleness"] == 0
+        assert out["overlap_saved_time"] == 0.0
+    same = jax.tree.map(lambda a, b: bool(np.array_equal(a, b)),
+                        tr.params, ref_params)
+    assert all(jax.tree.leaves(same)), "params diverged from sequential loop"
+    tr.close()
+
+
+# ---------------------------------------------------------------------------
+# overlap=True pipeline
+# ---------------------------------------------------------------------------
+
+
+def test_overlap_on_convergence_smoke(init_params):
+    tr = _trainer(init_params, overlap=True)
+    tr.batch_timeout = 120.0
+    try:
+        outs = [tr.step() for _ in range(5)]
+    finally:
+        tr.close()
+    assert [o["step"] for o in outs] == list(range(5))
+    for o in outs:
+        assert np.isfinite(o["pg_loss"])
+        assert np.isfinite(o["ratio_mean"])
+        assert np.isfinite(o["reward_mean"])
+        assert 0 <= o["param_staleness"] <= 1
+    # the pipeline actually overlapped: at least one batch was collected
+    # under params one update behind the ones that trained on it
+    assert any(o["param_staleness"] == 1 for o in outs[1:])
+
+
+def test_overlap_staleness_accounting(init_params):
+    tr = _trainer(init_params, overlap=True, max_staleness=1)
+    tr.batch_timeout = 120.0
+    try:
+        for _ in range(N_STEPS):
+            out = tr.step()
+            train_stage = out["step"]
+            stages = tr.last_batch["stage_ids"]
+            resp = stages >= 0
+            # every trained token was sampled under a policy no NEWER than
+            # the training stage, and the params snapshot lag is bounded
+            assert (stages[resp] <= train_stage).all()
+            assert out["param_staleness"] <= tr.max_staleness
+            hist = out["staleness_hist"]
+            assert all(g >= 0 for g in hist)
+            assert sum(hist.values()) == int(resp.sum())
+            off = sum(c for g, c in hist.items() if g > 0)
+            assert out["off_policy_frac"] == pytest.approx(
+                off / max(1, int(resp.sum())))
+    finally:
+        tr.close()
+
+
+def test_collect_is_single_owner(init_params):
+    """The engine owns its donated KV cache: a second concurrent collect
+    must be refused loudly (the overlapped trainer drives collect from one
+    producer thread only)."""
+    tr = _trainer(init_params, overlap=False)
+    eng = tr.engine
+    assert eng._collect_guard.acquire(blocking=False)
+    try:
+        with pytest.raises(RuntimeError, match="single thread"):
+            eng.collect(tr.params, 0, jax.random.PRNGKey(0))
+    finally:
+        eng._collect_guard.release()
+    tr.close()
+
+
+def test_off_policy_frac_counts_consuming_stage(init_params):
+    """A trajectory finished entirely under stage k-1 but trained at stage
+    k is fully off-policy — the trainer's accounting must count it (the old
+    per-trajectory 'latest own stage' accounting reported zero)."""
+    from repro.core.trajectory import Group
+
+    g = Group(group_id=0, prompt_tokens=np.asarray([12, 1, 2], np.int32),
+              answer=0, size=1)
+    t = g.spawn()
+    for _ in range(5):
+        t.append(1, -0.5, 3)           # all tokens from stage 3
+    t.done = True
+    t.reward = 1.0
+    assert t.off_policy_tokens(3) == 0     # consumed at its own stage
+    assert t.off_policy_tokens(4) == 5     # consumed one stage later
+    b = pack_groups([g], pad_multiple=16)
+    stages = b["stage_ids"]
+    resp = stages >= 0
+    assert int(((stages < 4) & resp).sum()) == 5
+    # buffer-level view (the engine reports this as buffer_off_policy_frac)
+    from repro.core.buffer import TrajectoryBuffer
+    buf = TrajectoryBuffer()
+    buf.add_group(g)
+    assert buf.off_policy_token_fraction(3) == 0.0
+    assert buf.off_policy_token_fraction(4) == 1.0
+
+
+# ---------------------------------------------------------------------------
+# evaluate() eos regression (satellite)
+# ---------------------------------------------------------------------------
+
+
+class _DecoyEosTask:
+    """Task whose own eos_id attribute is a DECOY (≠ the engine's): the old
+    evaluate() stopped on getattr(task, 'eos_id', 13) instead of the eos the
+    engine/rollout were built with."""
+
+    eos_id = 5                          # decoy
+
+    def __init__(self):
+        self.seen = []
+
+    def sample_prompt(self):
+        return np.asarray([12, 1, 2], np.int32), 0
+
+    def reward(self, toks, answer):
+        self.seen.append(list(toks))
+        return 0.0
+
+
+def test_evaluate_stops_on_engine_eos(monkeypatch, init_params):
+    from repro.core import copris as C
+
+    task = _DecoyEosTask()
+    ro = RolloutConfig(batch_size=2, group_size=2, max_prompt_len=8,
+                       max_response_len=8, concurrency=2)
+    tr = CoPRISTrainer(CFG, ro, TrainConfig(), task, eos_id=7,
+                       params=init_params)
+
+    V = CFG.vocab_size
+
+    def fake_logits(tok):
+        logit = np.full((1, V), -1e9, np.float32)
+        logit[0, tok] = 0.0
+        return jnp.asarray(logit)
+
+    calls = {"n": 0}
+
+    def fake_decode(params, cfg, tok, cache, cl, **kw):
+        calls["n"] += 1
+        # greedy script: decoy eos (5) first, engine eos (7) second, filler
+        return fake_logits(7 if calls["n"] == 1 else 9), cache
+
+    monkeypatch.setattr(C.M, "init_cache", lambda *a, **k: None)
+    monkeypatch.setattr(C.M, "prefill",
+                        lambda *a, **k: (fake_logits(5), None))
+    monkeypatch.setattr(C.M, "decode_step", fake_decode)
+
+    tr.evaluate(n_prompts=1)
+    # must decode PAST the task's decoy eos (5) and stop exactly on the
+    # engine's eos (7) — the old code either stopped early on 5 or (absent
+    # the attribute) ran on looking for 13
+    assert task.seen == [[5, 7]]
+    tr.close()

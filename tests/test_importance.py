@@ -52,3 +52,44 @@ def test_pack_alignment(seed, n, G):
     # group-major order: reshaping recovers groups
     gi = b["group_index"].reshape(n, G)
     assert (gi == gi[:, :1]).all()
+
+
+def test_pack_truncation_guard_keeps_reward_row():
+    """A prompt at/over the truncated T (max_len cap) leaves no response
+    room: the row must still pack — empty response region, no negative
+    behaviour-logp slice — and still carry its reward for the group
+    advantage baseline."""
+    g = Group(group_id=0, prompt_tokens=np.arange(40, dtype=np.int32),
+              answer=0, size=1)
+    t = g.spawn()
+    for _ in range(10):
+        t.append(1, -0.5, 0)
+    t.done = True
+    t.reward = 0.75
+    b = pack_groups([g], pad_multiple=16, max_len=32)
+    assert b["tokens"].shape[1] == 32
+    assert b["response_mask"].sum() == 0          # no response room survives
+    assert (b["behaviour_logp"] == 0).all()
+    assert (b["stage_ids"] == -1).all()
+    assert b["rewards"][0] == 0.75                # reward still rides along
+    # prompt_lens clamped to the packed row so P <= L for every consumer
+    assert b["prompt_lens"][0] == b["total_lens"][0] == 32
+    np.testing.assert_array_equal(b["tokens"][0], np.arange(32))
+
+
+def test_pack_partial_truncation_clips_response():
+    """max_len between prompt and total: the response region is clipped to
+    the surviving tokens and behaviour/stages stay aligned."""
+    g = Group(group_id=0, prompt_tokens=np.arange(8, dtype=np.int32),
+              answer=0, size=1)
+    t = g.spawn()
+    for j in range(30):
+        t.append(j % 50, -float(j + 1), 0)
+    t.done = True
+    t.reward = 1.0
+    b = pack_groups([g], pad_multiple=16, max_len=16)
+    P, L = b["prompt_lens"][0], b["total_lens"][0]
+    assert (P, L) == (8, 16)
+    assert b["response_mask"][0, P:L].sum() == 8
+    np.testing.assert_allclose(b["behaviour_logp"][0, P:L],
+                               [-(j + 1) for j in range(8)])

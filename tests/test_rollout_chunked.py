@@ -89,3 +89,64 @@ def test_overgeneration_is_trimmed_and_accounted(params):
     # device steps past a stop/termination are counted, never appended
     assert stats["decode_steps"] == stats["decode_chunks"] * 8
     assert stats["generated"] <= stats["active_slot_steps"]
+
+
+def test_stop_predicate_agrees_at_cache_capacity(params):
+    """Decode right up to max_len: the device sampler and the host replay
+    share ONE stop predicate (rollout.stop_flags), so trajectories that hit
+    cache capacity mid-chunk must stop on both sides at exactly
+    total_len == max_len - 1 — no 'device/host stop detection
+    desynchronised' assert, no K/V write past capacity."""
+    task = AdditionTask(max_value=20, seed=1)
+    # eos_id=-1 is unsampleable and max_response_len is huge, so the ONLY
+    # stop that can fire is the cache-capacity bound
+    ro = RolloutConfig(batch_size=2, group_size=2, max_prompt_len=16,
+                       max_response_len=10_000, concurrency=4, mode="sync",
+                       decode_chunk=8)
+    eng = RolloutEngine(CFG, ro, task.sample_prompt, eos_id=-1, max_len=64)
+    groups, stats = eng.collect(params, 0, jax.random.PRNGKey(3))
+    trajs = [t for g in groups for t in g.trajectories]
+    assert trajs
+    for t in trajs:
+        assert t.finish_reason == "length"
+        assert t.total_len == eng.max_len - 1
+    # every sampled token was appended — decode-generated plus the one
+    # token each prefill samples (the capacity stop was detected on device
+    # in the same step the host stopped, so nothing desynchronised)
+    n_resp = sum(len(t.response_tokens) for t in trajs)
+    assert stats["generated"] + stats["prefill_count"] == n_resp
+    # single-stage collect: the stage-gap histogram is all gap-0 and covers
+    # every collected token
+    assert stats["stage_gap_hist"] == {0: n_resp}
+    assert stats["off_policy_tokens"] == 0
+
+
+def test_stop_flags_pins_legacy_device_and_host_formulas():
+    """stop_flags replaced two independently-maintained predicates: the
+    device's ``cache_len >= max_len - 3`` (pre-increment cache length) and
+    the host's ``total_len >= max_len - 1`` / ``resp >= max_response_len`` /
+    ``tok == eos``. Sweep the boundary and pin the shared function to BOTH
+    legacy formulas, so a drift in either parameterisation (e.g. a changed
+    cache_len invariant) fails here instead of desynchronising mid-rollout."""
+    from repro.core.rollout import stop_flags
+
+    max_len, max_resp, eos = 32, 12, 13
+    for resp_after in range(1, max_resp + 2):
+        for total_after in range(resp_after + 1, max_len + 2):
+            for tok in (eos, 5):
+                got = stop_flags(tok, resp_after, total_after, eos_id=eos,
+                                 max_response_len=max_resp, max_len=max_len)
+                # legacy host predicate (_maybe_done before unification)
+                want_host = (tok == eos,
+                             (resp_after >= max_resp)
+                             | (total_after >= max_len - 1))
+                assert got == want_host, (resp_after, total_after, tok)
+                # legacy device predicate (_sample_step before unification),
+                # expressed in the pre-increment cache length: after this
+                # token lands, total == cache_len + 2
+                cache_len_pre = total_after - 2
+                want_dev_stop = ((tok == eos)
+                                 | (resp_after >= max_resp)
+                                 | (cache_len_pre >= max_len - 3))
+                assert (got[0] | got[1]) == want_dev_stop, \
+                    (resp_after, total_after, tok)
