@@ -30,7 +30,8 @@ import numpy as np
 
 from repro.common.config import RolloutConfig
 from repro.core.buffer import TrajectoryBuffer
-from repro.core.scheduler import ConcurrencyScheduler
+from repro.core.scheduler import (AdaptiveConcurrencyController,
+                                  ConcurrencyScheduler)
 from repro.core.trajectory import Group
 
 
@@ -81,6 +82,11 @@ class StepStats:
     # decode_chunk engine steps; refills are batched per boundary
     decode_syncs: int = 0
     prefill_syncs: int = 0
+    # response tokens in the TRAINED batch (carried + fresh) — denominator
+    # of the off-policy fraction
+    batch_tokens: int = 0
+    # the in-flight target this stage ran under (static N' or adaptive)
+    concurrency_target: int = 0
 
     @property
     def host_syncs(self):
@@ -126,12 +132,13 @@ class RolloutSim:
         traj.append_run([0] * n_new, [-1.0] * n_new, self.stage)
 
     # -- one RL step ----------------------------------------------------
-    def run_step(self) -> StepStats:
+    def run_step(self, target_concurrency: Optional[int] = None) -> StepStats:
         ro, cl = self.ro, self.cluster
         st = StepStats()
-        sched = ConcurrencyScheduler(ro, self.buffer, self._new_group)
-        pool = (ro.batch_size * ro.group_size if ro.mode == "sync"
-                else ro.concurrency)
+        sched = ConcurrencyScheduler(ro, self.buffer, self._new_group,
+                                     target_concurrency=target_concurrency)
+        st.concurrency_target = sched.target_concurrency
+        pool = ro.slot_pool          # same derivation as RolloutEngine
         slots: list = [None] * pool
         grown = np.zeros(pool, np.int64)     # tokens generated this stage
         base_len = np.zeros(pool, np.int64)  # resumed-prefix length
@@ -232,6 +239,7 @@ class RolloutSim:
         # tokens of the training batch
         for g in groups:
             for t in g.trajectories:
+                st.batch_tokens += len(t.stage_ids)
                 st.carried_tokens += sum(1 for s in t.stage_ids
                                          if s != self.stage)
         st.logp_time = cl.logp_tok_rate * st.carried_tokens
@@ -247,21 +255,65 @@ class RolloutSim:
         return st
 
 
-def overlap_wall(stats) -> float:
-    """Wall-clock of the same step sequence under the one-step-async
-    overlapped pipeline: the train step (+ carried-token logp recompute)
-    for step k runs while the rollout (+prefill) of step k+1 collects, so
-    each pipeline slot costs max(train_k, rollout_{k+1}) instead of their
-    sum. Sequential wall is sum(s.step_time)."""
+def pipeline_schedule(stats, max_staleness: int = 1) -> dict:
+    """Event-driven schedule of the same step sequence under the
+    multi-step-async overlapped pipeline with depth ``max_staleness`` (K).
+
+    The producer may start collecting batch ``k`` once ``k - K`` batches
+    have TRAINED (the trainer's staleness gate); the consumer trains batch
+    ``k`` once it is collected and batch ``k-1`` trained. K=1 is the
+    classic one-step overlap (train_k hides behind rollout_{k+1}); larger K
+    lets a long-tailed rollout borrow slack from several train steps, so
+    ``wall(K=2) <= wall(K=1)`` on any schedule.
+
+    Returns::
+
+        wall             total wall-clock
+        staleness_trace  per-batch optimizer-updates gap between the params
+                         version available at rollout start and the stage
+                         that trains the batch (<= K by construction)
+        off_policy_frac  token fraction trained under a non-current policy:
+                         carried (cross-stage) tokens plus every fresh
+                         token of a batch collected under a stale version —
+                         the same consuming-stage accounting the live
+                         trainer reports
+    """
     if not stats:
-        return 0.0
+        return dict(wall=0.0, staleness_trace=[], off_policy_frac=0.0)
+    K = max_staleness
+    if K < 1:
+        raise ValueError(f"max_staleness must be >= 1, got {K}")
     roll = [s.rollout_time + s.prefill_time for s in stats]
     train = [s.train_time + s.logp_time for s in stats]
-    total = roll[0]                       # pipeline prologue: first rollout
-    for k in range(len(stats)):
-        nxt = roll[k + 1] if k + 1 < len(stats) else 0.0
-        total += max(train[k], nxt)
-    return total
+    n = len(stats)
+    roll_end = [0.0] * n
+    train_end = [0.0] * n
+    staleness = [0] * n
+    for k in range(n):
+        # staleness gate: collect k waits for train step k-K-1 (0-based) —
+        # i.e. until trained_batches >= k - K
+        gate = train_end[k - K - 1] if k - K - 1 >= 0 else 0.0
+        start = max(roll_end[k - 1] if k else 0.0, gate)
+        roll_end[k] = start + roll[k]
+        # params version at rollout start = # train steps already finished;
+        # batch k trains at stage k
+        version = sum(1 for j in range(k) if train_end[j] <= start)
+        staleness[k] = k - version
+        t_start = max(train_end[k - 1] if k else 0.0, roll_end[k])
+        train_end[k] = t_start + train[k]
+    off = tot = 0
+    for k, s in enumerate(stats):
+        fresh = s.batch_tokens - s.carried_tokens
+        off += s.carried_tokens + (fresh if staleness[k] > 0 else 0)
+        tot += s.batch_tokens
+    return dict(wall=train_end[-1], staleness_trace=staleness,
+                off_policy_frac=off / tot if tot else 0.0)
+
+
+def overlap_wall(stats, max_staleness: int = 1) -> float:
+    """Wall-clock of the overlapped pipeline (see
+    :func:`pipeline_schedule`). Sequential wall is ``sum(s.step_time)``."""
+    return pipeline_schedule(stats, max_staleness)["wall"]
 
 
 def run_steps(mode: str, n_steps: int, *, concurrency: int = 512,
@@ -280,9 +332,44 @@ def run_steps(mode: str, n_steps: int, *, concurrency: int = 512,
     return [sim.run_step() for _ in range(n_steps)]
 
 
+def run_adaptive(n_steps: int, *, concurrency: int = 512,
+                 concurrency_min: int = 0, concurrency_max: int = 0,
+                 batch_size: int = 64, group_size: int = 8,
+                 decode_chunk: int = 8,
+                 cluster: Optional[ClusterModel] = None,
+                 lengths: Optional[LengthModel] = None, seed: int = 0):
+    """CoPRIS rollout under the overlap-aware adaptive N' controller: the
+    controller observes each stage's rollout wall vs the train step it
+    overlaps and picks the next stage's in-flight target. Returns
+    (stats, controller) — ``controller.trace`` is the per-stage N'."""
+    cluster = cluster or ClusterModel()
+    lengths = lengths or LengthModel()
+    ro = RolloutConfig(batch_size=batch_size, group_size=group_size,
+                       concurrency=concurrency, mode="copris",
+                       max_response_len=lengths.max_len,
+                       decode_chunk=decode_chunk,
+                       adaptive_concurrency=True,
+                       concurrency_min=concurrency_min,
+                       concurrency_max=concurrency_max)
+    sim = RolloutSim(ro, cluster, lengths, seed=seed)
+    ctrl = AdaptiveConcurrencyController(ro)
+    stats = []
+    target = ctrl.target
+    for _ in range(n_steps):
+        st = sim.run_step(target_concurrency=target)
+        stats.append(st)
+        target = ctrl.observe(
+            rollout_time=st.rollout_time + st.prefill_time,
+            train_time=st.train_time + st.logp_time, evicted=st.evicted)
+    return stats, ctrl
+
+
 # ---------------------------------------------------------------------------
 # CI smoke entry point: tiny sweep, machine-readable JSON artifact
 # ---------------------------------------------------------------------------
+
+
+STALENESS_SWEEP = (1, 2, 4)
 
 
 def _smoke(n_steps: int, seed: int = 0) -> list:
@@ -314,9 +401,60 @@ def _smoke(n_steps: int, seed: int = 0) -> list:
             if mode == "copris" and chunk == 8:
                 # one-step-async overlapped pipeline on the same schedule:
                 # train(k) hides behind rollout(k+1)
-                ov = overlap_wall(stats)
-                rows.append(dict(row, overlap=True, step_time=ov,
-                                 overlap_saved_time=seq_time - ov))
+                sch = pipeline_schedule(stats)
+                rows.append(dict(
+                    row, overlap=True, max_staleness=1,
+                    step_time=sch["wall"],
+                    overlap_saved_time=seq_time - sch["wall"],
+                    off_policy_frac=sch["off_policy_frac"],
+                    staleness_trace=sch["staleness_trace"]))
+    # fig-4-style staleness ablation: one row per pipeline depth, each
+    # with its wall-clock, off-policy fraction, and per-batch staleness
+    # trace. Runs on a dedicated BALANCED schedule (train comparable to
+    # rollout): on the rollout-bound default schedule the staleness gate
+    # never binds and every depth collapses to the same wall — deeper
+    # pipelines only pay off when the producer can bank a lead during
+    # short rollouts and spend it on long ones.
+    bal_cluster = ClusterModel(train_time=4500.0)
+    bal_steps = max(n_steps, 6)
+    bal = run_steps("copris", bal_steps, concurrency=256, batch_size=16,
+                    group_size=4, cluster=bal_cluster, seed=seed)
+    bal_seq = sum(s.step_time for s in bal)
+    for K in STALENESS_SWEEP:
+        sch = pipeline_schedule(bal, max_staleness=K)
+        rows.append(dict(
+            mode="copris_staleness", decode_chunk=8, overlap=True,
+            max_staleness=K, steps=bal_steps,
+            step_time=sch["wall"],
+            overlap_saved_time=bal_seq - sch["wall"],
+            off_policy_frac=sch["off_policy_frac"],
+            mean_staleness=sum(sch["staleness_trace"]) / bal_steps,
+            staleness_trace=sch["staleness_trace"],
+            evicted=sum(s.evicted for s in bal),
+            generated_tokens=sum(s.generated_tokens for s in bal)))
+    # overlap-aware adaptive N': rollout fits inside a slow train step, so
+    # the controller shrinks the in-flight target between stages, cutting
+    # evicted (guaranteed off-policy) long-tail work without giving back
+    # wall-clock; the static-N' run on the same schedule is the baseline.
+    # train_time dominates so the smoke exercises the shrink direction
+    # deterministically.
+    ad_cluster = ClusterModel(train_time=9000.0)
+    ad_steps = max(n_steps, 6)
+    stats, ctrl = run_adaptive(ad_steps, concurrency=256, concurrency_min=32,
+                               batch_size=16, group_size=4,
+                               cluster=ad_cluster, seed=seed)
+    base = run_steps("copris", ad_steps, concurrency=256, batch_size=16,
+                     group_size=4, cluster=ad_cluster, seed=seed)
+    rows.append(dict(
+        mode="copris_adaptive", decode_chunk=8, overlap=True,
+        max_staleness=1, steps=ad_steps,
+        step_time=overlap_wall(stats),
+        static_step_time=overlap_wall(base),
+        concurrency_trace=list(ctrl.trace),
+        evicted=sum(s.evicted for s in stats),
+        static_evicted=sum(s.evicted for s in base),
+        generated_tokens=sum(s.generated_tokens for s in stats),
+    ))
     return rows
 
 
@@ -341,7 +479,8 @@ def main(argv=None) -> None:
         chunk8 = next(r for r in rows
                       if r["mode"] == "copris" and r["decode_chunk"] == 8
                       and not r["overlap"])
-        ov = next(r for r in rows if r["overlap"])
+        ov = next(r for r in rows
+                  if r["mode"] == "copris" and r.get("overlap"))
         # CI acceptance: the overlapped pipeline must beat the sequential
         # rollout+update sum — a degenerate schedule fails the smoke here
         # instead of silently shipping a useless artifact. A single-step
@@ -352,12 +491,42 @@ def main(argv=None) -> None:
             assert (ov["step_time"]
                     < chunk8["rollout_time"] + chunk8["update_time"]), \
                 f"overlap did not save time: {ov}"
+        # staleness ablation invariants on the balanced schedule: the
+        # per-batch staleness respects its bound, a deeper pipeline has
+        # strictly more slack (never slower), and the lead the producer
+        # banks can only grow with K
+        stale = {r["max_staleness"]: r for r in rows
+                 if r["mode"] == "copris_staleness"}
+        for K, r in stale.items():
+            assert max(r["staleness_trace"], default=0) <= K, r
+        assert stale[2]["step_time"] <= stale[1]["step_time"] + 1e-9, \
+            f"deeper pipeline got slower: {stale[2]} vs {stale[1]}"
+        assert stale[4]["step_time"] <= stale[2]["step_time"] + 1e-9, \
+            f"deeper pipeline got slower: {stale[4]} vs {stale[2]}"
+        assert (stale[1]["mean_staleness"] <= stale[2]["mean_staleness"]
+                <= stale[4]["mean_staleness"]), \
+            f"staleness must be monotone in pipeline depth: {stale}"
+        adaptive = next(r for r in rows if r["mode"] == "copris_adaptive")
+        assert len(adaptive["concurrency_trace"]) == adaptive["steps"] + 1, \
+            f"adaptive row must carry its per-stage N' trace: {adaptive}"
+        # the controller must have cut evicted long-tail work without
+        # giving back wall-clock (train-dominated schedule: rollout has
+        # slack, so shrinking N' is free)
+        assert adaptive["evicted"] < adaptive["static_evicted"], adaptive
+        assert (adaptive["step_time"]
+                <= adaptive["static_step_time"] * 1.02), adaptive
         print(f"wrote {args.json}: copris syncs/1k-tok "
               f"{chunk1['syncs_per_1k_tokens']:.2f} (chunk=1) -> "
               f"{chunk8['syncs_per_1k_tokens']:.2f} (chunk=8); "
               f"overlap step_time {chunk8['step_time']:.0f} -> "
               f"{ov['step_time']:.0f} "
-              f"(saved {ov['overlap_saved_time']:.0f})")
+              f"(saved {ov['overlap_saved_time']:.0f}); staleness wall "
+              + " ".join(f"K={K}:{r['step_time']:.0f}"
+                         f"/stale={r['mean_staleness']:.2f}"
+                         for K, r in sorted(stale.items()))
+              + f"; adaptive N' {adaptive['concurrency_trace']} "
+              f"evicted {adaptive['static_evicted']} -> "
+              f"{adaptive['evicted']}")
     else:
         print(blob)
 

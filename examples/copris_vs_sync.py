@@ -36,21 +36,28 @@ for mode, conc in [("sync", 0), ("naive_partial", 48), ("copris", 16)]:
           f"{sum(util)/len(util):6.2f} {resumed:8d}")
 
 # ---------------------------------------------------------------------------
-# Trainer pipeline: sequential vs overlapped (one-step async). The overlapped
-# trainer collects stage k+1 on a background thread while stage k trains;
-# `overlap_saved_time` is what the sequential pipeline would have paid extra.
+# Trainer pipeline: sequential vs overlapped (one- and multi-step async) vs
+# disaggregated. The overlapped trainer collects stage k+K on a background
+# thread while stage k trains (tokens carry their stage id, so the
+# cross-stage IS correction absorbs up to K updates of staleness);
+# disaggregated additionally routes every published params version through
+# the ParamStore reshard (train layout -> rollout layout) — on this
+# single-device mesh a jitted identity, on a real deployment the
+# device-to-device weight sync.
 # ---------------------------------------------------------------------------
 print(f"\n{'pipeline':16s} {'step_s':>8s} {'stale':>6s} {'saved_s':>8s}")
-for overlap in (False, True):
+for name, kw in [("sequential", {}),
+                 ("overlap K=1", dict(overlap=True)),
+                 ("overlap K=2", dict(overlap=True, max_staleness=2)),
+                 ("disaggregated", dict(overlap=True, disaggregated=True))]:
     task = AdditionTask(max_value=50, seed=0)
     ro = RolloutConfig(batch_size=8, group_size=4, max_prompt_len=16,
                        max_response_len=48, concurrency=16, mode="copris")
-    tc = TrainConfig(lr=2e-4, warmup_steps=2, overlap=overlap)
+    tc = TrainConfig(lr=2e-4, warmup_steps=2, **kw)
     with CoPRISTrainer(cfg, ro, tc, task, eos_id=EOS,
                        params=jax.tree.map(jnp.copy, params)) as tr:
         tr.step()                                          # warm jit caches
         outs = [tr.step() for _ in range(3)]
-    name = "overlap" if overlap else "sequential"
     print(f"{name:16s} "
           f"{sum(o['step_time'] for o in outs)/len(outs):8.2f} "
           f"{max(o['param_staleness'] for o in outs):6d} "

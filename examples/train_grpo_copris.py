@@ -7,6 +7,10 @@ the same CLI scales from `tiny` to any assigned arch (use --smoke for CPU).
     # one-step-async pipeline: rollout overlaps the optimizer step, the
     # cross-stage IS correction absorbs the one-update staleness
     PYTHONPATH=src python examples/train_grpo_copris.py --overlap
+    # multi-step pipeline (producer runs up to 2 updates ahead) with the
+    # versioned ParamStore weight sync and overlap-aware adaptive N'
+    PYTHONPATH=src python examples/train_grpo_copris.py --overlap \\
+        --max-staleness 2 --disaggregated --adaptive-concurrency
 """
 import sys
 

@@ -270,7 +270,7 @@ class RolloutConfig:
     top_p: float = 1.0
     top_k: int = -1
     # --- CoPRIS specific ---
-    concurrency: int = 1024            # N': fixed in-flight rollout requests
+    concurrency: int = 1024            # N': in-flight rollout requests
     mode: str = "copris"               # copris | naive_partial | sync
     resume_strategy: str = "reprefill"  # reprefill | kv_snapshot
     # Device-side decode steps fused per engine step (one jitted lax.scan).
@@ -278,6 +278,38 @@ class RolloutConfig:
     # detection (EOS / length) runs on device and post-stop samples are
     # trimmed by the host replay. 1 reproduces the step-wise engine.
     decode_chunk: int = 8
+    # --- overlap-aware adaptive N' (ROLL-Flash-style) ---
+    # The static N' above stays the default. With adaptive_concurrency the
+    # trainer adjusts the in-flight target BETWEEN stages from observed
+    # finish/refill rates (rollout wall vs the train step it overlaps),
+    # clamped to [concurrency_min, concurrency_max]. 0 resolves to
+    # max(1, concurrency // 4) and concurrency respectively — by default
+    # the controller only ever *shrinks* below the static N' (the slot pool
+    # is sized to concurrency_max, so raising it costs KV memory).
+    adaptive_concurrency: bool = False
+    concurrency_min: int = 0
+    concurrency_max: int = 0
+
+    @property
+    def resolved_concurrency_min(self) -> int:
+        return self.concurrency_min or max(1, self.concurrency // 4)
+
+    @property
+    def resolved_concurrency_max(self) -> int:
+        return self.concurrency_max or self.concurrency
+
+    @property
+    def slot_pool(self) -> int:
+        """Engine slot-pool (and KV cache) size. B*G for sync's fixed
+        workload; otherwise the static N' — raised to the adaptive upper
+        bound only when the controller that could ask for it is actually
+        on (a leftover concurrency_max from an adaptive experiment must
+        not silently inflate the cache allocation)."""
+        if self.mode == "sync":
+            return self.batch_size * self.group_size
+        if self.adaptive_concurrency:
+            return max(self.concurrency, self.resolved_concurrency_max)
+        return self.concurrency
 
     def __post_init__(self):
         if self.decode_chunk < 1:
@@ -287,6 +319,27 @@ class RolloutConfig:
         if self.resume_strategy not in ("reprefill", "kv_snapshot"):
             raise ValueError(
                 f"unknown resume strategy {self.resume_strategy!r}")
+        if self.concurrency_min < 0 or self.concurrency_max < 0:
+            raise ValueError(
+                "concurrency_min/concurrency_max must be >= 0 (0 = derive "
+                f"from concurrency); got min={self.concurrency_min} "
+                f"max={self.concurrency_max}")
+        if self.adaptive_concurrency:
+            if self.mode != "copris":
+                raise ValueError(
+                    f"adaptive_concurrency requires mode='copris' (got "
+                    f"{self.mode!r}): sync dispatches a fixed B*G workload "
+                    "and naive_partial never refills, so neither has an "
+                    "in-flight target to adapt")
+            lo, hi = (self.resolved_concurrency_min,
+                      self.resolved_concurrency_max)
+            if not (1 <= lo <= self.concurrency <= hi):
+                raise ValueError(
+                    "adaptive_concurrency bounds must satisfy 1 <= "
+                    "concurrency_min <= concurrency <= concurrency_max; "
+                    f"resolved to min={lo} concurrency={self.concurrency} "
+                    f"max={hi} — adjust concurrency_min/concurrency_max "
+                    "(0 derives min=concurrency//4, max=concurrency)")
 
 
 @dataclass(frozen=True)
@@ -319,14 +372,29 @@ class TrainConfig:
     overlap: bool = False
     # Max optimizer updates the training step may be ahead of the params
     # that generated the batch it consumes (pipeline depth). 1 = classic
-    # one-step async; the producer blocks rather than exceed it.
+    # one-step async; K > 1 lets the producer run up to K collects ahead
+    # (multi-step async — stage ids carried by tokens keep the cross-stage
+    # IS correction exact at any depth). The producer blocks rather than
+    # exceed it.
     max_staleness: int = 1
+    # Disaggregated rollout/train: route every published params version
+    # through the versioned ParamStore reshard (train FSDP layout ->
+    # rollout serve_tp_only layout, see core/weight_sync.py). Requires
+    # overlap=True — without a producer thread there is no second side to
+    # sync weights to.
+    disaggregated: bool = False
 
     def __post_init__(self):
         if self.max_staleness < 1:
             raise ValueError(
                 f"max_staleness must be >= 1 (got {self.max_staleness}); "
                 "0 would deadlock the overlapped pipeline")
+        if self.disaggregated and not self.overlap:
+            raise ValueError(
+                "disaggregated=True requires overlap=True: the versioned "
+                "weight sync feeds the background rollout producer; set "
+                "TrainConfig(overlap=True, disaggregated=True) (CLI: "
+                "--overlap --disaggregated)")
 
 
 @dataclass(frozen=True)

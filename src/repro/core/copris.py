@@ -12,15 +12,24 @@ path:
 * ``overlap=False`` — the sequential loop: collect → reward-gather → train,
   bit-identical to the historical trainer (same per-trajectory PRNG
   streams, same stage stamps).
-* ``overlap=True`` — one-step async (the Laminar / ROLL-Flash style overlap
-  on top of partial rollout): a background producer thread runs
-  ``RolloutEngine.collect`` against an immutable snapshot of the freshest
-  published params while the consumer (``step``) trains on the previous
-  collected batch. Tokens carry the snapshot's stage id, so the existing
-  cross-stage IS correction absorbs the staleness; ``max_staleness`` bounds
-  how many optimizer updates the training step may be ahead of the params
-  that generated its batch. The producer owns the engine (and therefore the
-  donated KV cache) exclusively.
+* ``overlap=True`` — multi-step async (the Laminar / ROLL-Flash style
+  overlap on top of partial rollout): a background producer thread runs
+  ``RolloutEngine.collect`` against the freshest version published to the
+  :class:`~repro.core.weight_sync.ParamStore` while the consumer (``step``)
+  trains on a previously collected batch. Tokens carry the acquired
+  version's stage id, so the existing cross-stage IS correction absorbs the
+  staleness; ``max_staleness`` bounds how many optimizer updates the
+  training step may be ahead of the params that generated its batch (K > 1
+  lets the producer run K collects ahead). The producer owns the engine
+  (and therefore the donated KV cache) exclusively.
+
+All producer/consumer param handoff goes through the ``ParamStore``: the
+consumer publishes every optimizer update as a new version, the producer
+(and ``evaluate``) acquire the freshest one. With
+``TrainConfig.disaggregated`` each published version is additionally
+resharded from the train layout (FSDP ``data``+``model``) to the rollout
+layout (``serve_tp_only``) — the versioned device-to-device weight sync a
+separated rollout/train deployment needs.
 """
 from __future__ import annotations
 
@@ -39,6 +48,8 @@ from repro.common.config import ModelConfig, RolloutConfig, TrainConfig
 from repro.core import grpo
 from repro.core.importance import pack_groups
 from repro.core.rollout import RolloutEngine
+from repro.core.scheduler import AdaptiveConcurrencyController
+from repro.core.weight_sync import ParamStore, make_param_resharder
 from repro.models import model as M
 from repro.optim import adam, schedule
 
@@ -173,7 +184,8 @@ class CoPRISTrainer:
 
     def __init__(self, model_cfg: ModelConfig, ro_cfg: RolloutConfig,
                  tcfg: TrainConfig, task, *, eos_id: int, key=None,
-                 params=None, use_pallas: bool = False):
+                 params=None, use_pallas: bool = False,
+                 train_mesh=None, rollout_mesh=None):
         self.cfg = model_cfg
         self.ro = ro_cfg
         self.tcfg = tcfg
@@ -205,7 +217,34 @@ class CoPRISTrainer:
         # how long step() may wait on the producer before declaring the
         # pipeline wedged (None = wait forever; tests set a finite value)
         self.batch_timeout: Optional[float] = None
-        self._param_lock = threading.Lock()   # (params, opt_state, stage)
+
+        # ---- versioned weight sync (ParamStore) ----------------------
+        # ALL producer/consumer param handoff goes through the store: the
+        # consumer publishes version = stage after every update, the
+        # producer / evaluate acquire the freshest. max_staleness bounds
+        # the pipeline depth, so K+1 versions cover every batch still in
+        # flight — older ones are dropped at publish (Laminar drop-stale).
+        reshard = None
+        if tcfg.disaggregated:
+            from repro.launch.mesh import make_cpu_mesh
+            self.train_mesh = (train_mesh if train_mesh is not None
+                               else make_cpu_mesh())
+            self.rollout_mesh = (rollout_mesh if rollout_mesh is not None
+                                 else self.train_mesh)
+            reshard, _ = make_param_resharder(
+                model_cfg, self.params, self.train_mesh, self.rollout_mesh)
+        self.param_store = ParamStore(max_versions=self.max_staleness + 1,
+                                      reshard=reshard)
+        self.param_store.publish(self.params, self.stage)
+
+        # ---- overlap-aware adaptive N' -------------------------------
+        # observe() runs on the consumer thread between stages; the
+        # producer reads the plain-int target at collect start (GIL-atomic)
+        self._concurrency_ctrl = (AdaptiveConcurrencyController(ro_cfg)
+                                  if ro_cfg.adaptive_concurrency else None)
+        self._concurrency_target: Optional[int] = (
+            self._concurrency_ctrl.target if self._concurrency_ctrl else None)
+
         self._progress = threading.Condition()
         self._batches: "queue.Queue[_StageBatch]" = queue.Queue(
             maxsize=self.max_staleness + 1)
@@ -213,6 +252,10 @@ class CoPRISTrainer:
         self._producer_exc: Optional[BaseException] = None
         self._collect_idx = 0                 # next collect, producer-owned
         self._trained_batches = 0             # consumed collects
+        # store totals already reported, so step metrics emit per-step
+        # deltas (summable across a run like every sibling *_time field)
+        self._reported_dropped = self.param_store.stats["dropped"]
+        self._reported_reshard_time = self.param_store.stats["reshard_time"]
         self._stop = threading.Event()
         self._closed = False
 
@@ -224,16 +267,11 @@ class CoPRISTrainer:
         self.key, k = jax.random.split(self.key)
         return k
 
-    def _snapshot_params(self):
-        """Immutable (params, version) pair for the rollout side. jax
-        arrays are immutable, so holding the reference is safe while the
-        consumer publishes fresh trees."""
-        with self._param_lock:
-            return self.params, self.stage
-
     def _collect_stage(self, params, version: int, idx: int) -> _StageBatch:
         k_roll = self._next_rollout_key()
-        groups, roll_stats = self.engine.collect(params, version, k_roll)
+        groups, roll_stats = self.engine.collect(
+            params, version, k_roll,
+            target_concurrency=self._concurrency_target)
         return _StageBatch(collect_idx=idx, params_version=version,
                            groups=groups, roll_stats=roll_stats)
 
@@ -250,7 +288,9 @@ class CoPRISTrainer:
                         self._progress.wait(timeout=0.1)
                 if self._stop.is_set():
                     return
-                params, version = self._snapshot_params()
+                # freshest published version (rollout layout when
+                # disaggregated) — never a superseded one
+                params, version = self.param_store.acquire()
                 item = self._collect_stage(params, version, idx)
                 self._collect_idx = idx + 1
                 while not self._stop.is_set():
@@ -299,7 +339,10 @@ class CoPRISTrainer:
             self._ensure_producer()
             item = self._next_batch()
         else:
-            params, version = self.params, self.stage
+            # same handoff as the producer thread: freshest published
+            # version — identical to (self.params, self.stage) here, since
+            # the sequential consumer is the only publisher
+            params, version = self.param_store.acquire()
             item = self._collect_stage(params, version, self._collect_idx)
             self._collect_idx += 1
         t_collected = time.perf_counter()
@@ -329,11 +372,14 @@ class CoPRISTrainer:
                                       warmup_steps=self.tcfg.warmup_steps)
         new_params, new_opt, metrics = self._train_step(
             self.params, self.opt_state, jb, lr)
-        # publish atomically for the producer's snapshot, then wake its
-        # staleness gate
-        with self._param_lock:
-            self.params, self.opt_state = new_params, new_opt
-            self.stage = train_stage + 1
+        # publish the update as a new version for the producer (resharded
+        # to the rollout layout when disaggregated), then wake its
+        # staleness gate. Only the consumer thread mutates
+        # params/opt_state/stage; the producer reads exclusively through
+        # the store, so no lock is needed around the plain assignments.
+        self.params, self.opt_state = new_params, new_opt
+        self.stage = train_stage + 1
+        self.param_store.publish(new_params, self.stage)
         with self._progress:
             self._trained_batches += 1
             self._progress.notify_all()
@@ -363,6 +409,17 @@ class CoPRISTrainer:
         update_time = t_end - t_reward
         reward_time = self.reward_worker.last_gather_time
         step_time = t_end - t0
+
+        # overlap-aware adaptive N': feed this stage's finish/refill
+        # balance (rollout wall vs the consumer work it overlapped) to the
+        # controller; the producer picks the new target up at its NEXT
+        # collect start — concurrency adjusts between stages, never inside
+        # one
+        if self._concurrency_ctrl is not None:
+            self._concurrency_target = self._concurrency_ctrl.observe(
+                rollout_time=rollout_time,
+                train_time=t_end - t_collected,
+                evicted=roll_stats["evicted"])
         out.update(
             step=train_stage,
             reward_mean=float(batch["rewards"].mean()),
@@ -391,13 +448,47 @@ class CoPRISTrainer:
             multi_stage_trajs=roll_stats["multi_stage_trajs"],
             utilization=roll_stats["utilization"],
             buffer_unfinished=roll_stats["buffer_unfinished"],
+            # the in-flight target the collect ran under (static N' unless
+            # adaptive_concurrency) and the weight-sync channel state
+            # (versions held is a gauge; dropped/reshard are THIS step's)
+            concurrency_target=roll_stats["concurrency_target"],
+            param_store_versions=self.param_store.num_versions,
+            dropped_versions=(self.param_store.stats["dropped"]
+                              - self._reported_dropped),
+            reshard_time=(self.param_store.stats["reshard_time"]
+                          - self._reported_reshard_time),
             mean_resp_len=float(np.mean([len(t.response_tokens)
                                          for g in groups
                                          for t in g.trajectories])),
         )
+        self._reported_dropped = self.param_store.stats["dropped"]
+        self._reported_reshard_time = self.param_store.stats["reshard_time"]
         self.last_groups = groups
         self.last_batch = batch
         return out
+
+    # ------------------------------------------------------------------
+    def restore(self, *, params=None, opt_state=None, stage=None):
+        """Resume from checkpoint state: update the trainer fields AND
+        republish through the ParamStore so the rollout side acquires the
+        restored weights (setting ``.params``/``.stage`` directly would
+        leave the store serving the construction-time version). Must be
+        called before the first ``step()``."""
+        if self._producer is not None:
+            raise RuntimeError("restore() after the producer started — "
+                               "restore before the first step()")
+        if params is not None:
+            self.params = params
+        if opt_state is not None:
+            self.opt_state = opt_state
+        if stage is not None:
+            if stage < self.stage:
+                raise ValueError(
+                    f"restore to stage {stage} < current {self.stage}: "
+                    "ParamStore versions are strictly monotonic — build a "
+                    "fresh trainer to rewind")
+            self.stage = stage
+        self.param_store.publish(self.params, self.stage, replace=True)
 
     # ------------------------------------------------------------------
     def close(self):
@@ -431,7 +522,9 @@ class CoPRISTrainer:
         """Greedy accuracy on fresh task prompts (exact reward)."""
         key = key if key is not None else jax.random.PRNGKey(123)
         eos_id = self.engine.eos_id    # the id rollout/training stopped on
-        params, _ = self._snapshot_params()
+        # evaluate is a rollout-side consumer: freshest published version
+        # (rollout layout when disaggregated)
+        params, _ = self.param_store.acquire()
         correct = 0.0
         for i in range(n_prompts):
             cache = M.init_cache(self.cfg, 1, self.engine.max_len)

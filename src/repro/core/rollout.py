@@ -97,8 +97,11 @@ class RolloutEngine:
 
         self.on_finish = on_finish      # async-reward hook: (traj, answer)
         self._answers = {}
-        self.pool = (ro_cfg.batch_size * ro_cfg.group_size
-                     if ro_cfg.mode == "sync" else ro_cfg.concurrency)
+        # the slot pool is a fixed jit shape: under adaptive N' it is sized
+        # to the controller's upper bound so a between-stage target change
+        # never needs a recompile — stages running below the bound simply
+        # leave slots idle
+        self.pool = ro_cfg.slot_pool
         self.max_len = max_len or _round_up(
             ro_cfg.max_prompt_len + ro_cfg.max_response_len, PREFILL_BUCKET)
         self._chunk = ro_cfg.decode_chunk
@@ -325,7 +328,9 @@ class RolloutEngine:
                 pending = self._dispatch_refills(freed, sched)
 
     # ------------------------------------------------------------------
-    def collect(self, params, stage_id: int, key) -> Tuple[List[Group], dict]:
+    def collect(self, params, stage_id: int, key, *,
+                target_concurrency: Optional[int] = None
+                ) -> Tuple[List[Group], dict]:
         """Run rollout until B complete groups are collected (early
         termination). Returns (groups, stats).
 
@@ -333,24 +338,37 @@ class RolloutEngine:
         (only the engine-owned cache is), so the caller may keep training on
         a newer params tree concurrently. ``collect`` itself is single-owner
         — it must only ever run on one thread at a time (see
-        ``_collect_guard``)."""
+        ``_collect_guard``).
+
+        ``target_concurrency``: this stage's in-flight cap (adaptive N' —
+        must not exceed the slot pool; None = the static configured N')."""
         if not self._collect_guard.acquire(blocking=False):
             raise RuntimeError(
                 "RolloutEngine.collect re-entered: the engine owns its "
                 "donated KV cache and must be driven from a single thread")
         try:
-            return self._collect(params, stage_id, key)
+            return self._collect(params, stage_id, key,
+                                 target_concurrency=target_concurrency)
         finally:
             self._collect_guard.release()
 
-    def _collect(self, params, stage_id: int, key) -> Tuple[List[Group], dict]:
+    def _collect(self, params, stage_id: int, key, *,
+                 target_concurrency: Optional[int] = None
+                 ) -> Tuple[List[Group], dict]:
+        if target_concurrency is not None and not (
+                1 <= target_concurrency <= self.pool):
+            raise ValueError(
+                f"target_concurrency {target_concurrency} outside "
+                f"[1, pool={self.pool}] — the slot pool is sized to "
+                "concurrency_max at engine construction")
         self._stage = stage_id
         self._stats = dict(prefill_count=0, prefill_tokens=0, prefill_calls=0,
                            decode_steps=0, decode_chunks=0, host_syncs=0,
                            active_slot_steps=0, slot_steps=0, generated=0,
                            overgen_tokens=0, resumed=0, evicted=0)
         t0 = time.perf_counter()
-        sched = ConcurrencyScheduler(self.ro, self.buffer, self._new_group)
+        sched = ConcurrencyScheduler(self.ro, self.buffer, self._new_group,
+                                     target_concurrency=target_concurrency)
         if self.ro.mode == "sync":
             assert len(self.buffer) == 0, "sync mode must start with empty buffer"
 
@@ -427,6 +445,7 @@ class RolloutEngine:
 
         st = self._stats
         st["wall_time"] = time.perf_counter() - t0
+        st["concurrency_target"] = sched.target_concurrency
         st["buffer_unfinished"] = self.buffer.num_unfinished
         st["buffer_waiting"] = self.buffer.num_finished_waiting
         # how stale the carried-over buffer already is for the NEXT stage —

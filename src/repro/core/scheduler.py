@@ -3,11 +3,14 @@
 Pure-Python scheduling policy, separated from the JAX engine so its
 invariants are unit/property-testable:
 
-* exactly ``concurrency`` requests in flight whenever work exists
-  (mode="copris");
+* exactly the stage's in-flight target in flight whenever work exists
+  (mode="copris"; the target is ``concurrency`` by default, or the value an
+  :class:`AdaptiveConcurrencyController` picked for this stage);
 * dispatch priority: resume buffered partials > complete under-sampled
   buffered groups > open a new group (Prioritized Resumption);
-* early termination once ``batch_size`` groups are complete;
+* early termination once ``batch_size`` groups are complete — and once the
+  target is reached the scheduler must never open a NEW group (overspawn at
+  the stage tail would mint guaranteed-evicted, maximally-off-policy work);
 * mode="sync": submit B*G once, never early-terminate, never buffer;
 * mode="naive_partial": submit ``initial_concurrency`` once, no refill
   (the Kimi-K1.5-style baseline of Table 2).
@@ -23,10 +26,17 @@ from repro.core.trajectory import Group, Trajectory
 
 class ConcurrencyScheduler:
     def __init__(self, cfg: RolloutConfig, buffer: TrajectoryBuffer,
-                 new_group: Callable[[], Group]):
+                 new_group: Callable[[], Group], *,
+                 target_concurrency: Optional[int] = None):
         self.cfg = cfg
         self.buffer = buffer
         self.new_group = new_group
+        # per-stage in-flight cap: the engine's slot pool may be larger (it
+        # is sized to concurrency_max), but this stage keeps at most this
+        # many requests in flight
+        self.target_concurrency = (cfg.concurrency
+                                   if target_concurrency is None
+                                   else target_concurrency)
         self.completed: List[Group] = []
         self.dispatched = 0            # requests handed out this stage
         self.in_flight: set = set()    # traj_ids currently occupying slots
@@ -65,7 +75,7 @@ class ConcurrencyScheduler:
             if self.dispatched < self.cfg.concurrency:
                 t = self._copris_pick()
         elif mode == "copris":
-            if not self.done:
+            if not self.done and len(self.in_flight) < self.target_concurrency:
                 t = self._copris_pick()
         else:
             raise ValueError(mode)
@@ -96,7 +106,71 @@ class ConcurrencyScheduler:
         if t is None:
             t = self.buffer.pop_unspawned()
         if t is None:
+            # No-overspawn guard (defence in depth): once the stage's
+            # early-termination target is reached, never OPEN a new group —
+            # its samples could only be evicted at stage end and re-enter
+            # the next stage maximally off-policy. Resumes/unspawned above
+            # are still allowed (they advance already-committed groups).
+            # ``next_request`` already gates copris mode on ``done``; this
+            # keeps the invariant even for callers that reach the pick
+            # directly (naive_partial) or from a future dispatch path.
+            if self.done:
+                return None
             g = self.new_group()
             self.buffer.add_group(g)
             t = g.spawn()
         return t
+
+
+class AdaptiveConcurrencyController:
+    """Overlap-aware N' controller (ROLL-Flash-style, arXiv:2510.11345).
+
+    CoPRIS picks a static N' to balance per-step fixed cost against
+    saturation queueing — but the overlapped trainer changes the optimum:
+    rollout for stage k+1 has a full train-step of slack, so the target is
+    not "finish as fast as possible" but "finish *just inside* the train
+    step it hides behind". This controller adjusts the in-flight target
+    BETWEEN stages from the observed finish/refill balance:
+
+    * rollout slower than the train step it overlaps (``ratio > 1``):
+      rollout is the pipeline bottleneck — grow N' (more slots in flight
+      finish the B groups in fewer engine steps);
+    * rollout comfortably inside the slack (``ratio < 1``) *and* the stage
+      evicted partials: N' is oversized — shrink it, cutting the evicted
+      (guaranteed off-policy, re-prefilled) long-tail work the extra slots
+      minted without making the pipeline any faster.
+
+    Moves are proportional (``gain`` of the current target, scaled by how
+    far the ratio is outside the ``deadband``) and clamped to the
+    configured ``[concurrency_min, concurrency_max]``. The static N' is the
+    starting point and remains the default behaviour when
+    ``adaptive_concurrency`` is off. ``trace`` records the per-stage
+    targets (one entry per ``observe``, starting with the initial target).
+    """
+
+    def __init__(self, cfg: RolloutConfig, *, gain: float = 0.25,
+                 deadband: float = 0.1):
+        self.lo = cfg.resolved_concurrency_min
+        self.hi = cfg.resolved_concurrency_max
+        self.gain = gain
+        self.deadband = deadband
+        self.target = min(max(cfg.concurrency, self.lo), self.hi)
+        self.trace: List[int] = [self.target]
+
+    def observe(self, *, rollout_time: float, train_time: float,
+                evicted: int = 0) -> int:
+        """Feed one completed stage's timings; returns the target for the
+        NEXT stage. ``train_time`` is the consumer-side work the rollout
+        overlapped (update + reward gather); 0/None leaves N' unchanged
+        (nothing to balance against — e.g. the pipeline prologue)."""
+        if train_time and train_time > 0 and rollout_time >= 0:
+            ratio = rollout_time / train_time
+            if ratio > 1 + self.deadband:
+                step = self.gain * self.target * min(ratio - 1.0, 1.0)
+                self.target += max(1, int(step))
+            elif ratio < 1 - self.deadband and evicted > 0:
+                step = self.gain * self.target * min(1.0 - ratio, 1.0)
+                self.target -= max(1, int(step))
+            self.target = min(max(self.target, self.lo), self.hi)
+        self.trace.append(self.target)
+        return self.target

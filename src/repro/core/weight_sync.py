@@ -1,0 +1,187 @@
+"""Versioned weight-sync between the train and rollout sides of the loop.
+
+The overlapped trainer (PR 2) handed params to its rollout producer through
+a lock + reference snapshot — correct only because producer and consumer
+share host memory. A *disaggregated* deployment (separate rollout and train
+meshes, cf. Laminar arXiv:2510.12633) instead needs an explicit versioned
+channel: the trainer **publishes** each optimizer update as ``(params,
+version)``; the rollout side **acquires** the freshest published version.
+
+:class:`ParamStore` is that channel. Its contract:
+
+* ``publish`` is strictly version-monotonic — republishing an old version is
+  a programming error (the off-policy accounting keys on version order);
+* the store keeps a bounded window of in-flight versions and *drops stale*
+  ones as new params land (Laminar-style: a rollout that has not yet picked
+  up version ``v`` will simply start its next stage from ``v+1`` — there is
+  no point shipping superseded weights);
+* ``acquire`` always returns the freshest version — rollout never waits for
+  weights, staleness is bounded by the trainer's pipeline gate instead.
+
+In **disaggregated mode** ``publish`` additionally pushes every version
+through a reshard from the train layout (FSDP ``data``+``model``) to the
+rollout layout (``serve_tp_only``) built by :func:`make_param_resharder`.
+The same jitted reshard is lowered by ``launch/dryrun.py`` on the
+production mesh — what we dry-run is what we sync.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import OrderedDict
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+
+
+class ParamStore:
+    """Thread-safe versioned params channel (publish / acquire).
+
+    ``max_versions`` bounds how many published versions may be in flight at
+    once: with a pipeline that lets rollout lag the trainer by at most K
+    optimizer updates, ``K + 1`` versions cover every batch still in the
+    system; anything older is dropped at publish time (``stats["dropped"]``
+    counts the Laminar-style drop-stale evictions).
+
+    ``reshard``: optional callable applied to every published tree (the
+    train-layout -> rollout-layout device transfer in disaggregated mode).
+    jax arrays are immutable, so storing references is safe while the
+    trainer keeps updating its own tree.
+    """
+
+    def __init__(self, *, max_versions: int = 2,
+                 reshard: Optional[Callable[[Any], Any]] = None):
+        if max_versions < 1:
+            raise ValueError(
+                f"max_versions must be >= 1 (got {max_versions}); the store "
+                "must be able to hold at least the freshest version")
+        self._max_versions = max_versions
+        self._reshard = reshard
+        self._cv = threading.Condition()
+        self._versions: "OrderedDict[int, Any]" = OrderedDict()
+        self.stats = dict(published=0, dropped=0, acquired=0,
+                          reshard_time=0.0)
+
+    # ------------------------------------------------------------------
+    @property
+    def latest_version(self) -> int:
+        """Newest published version, or -1 before the first publish."""
+        with self._cv:
+            return next(reversed(self._versions)) if self._versions else -1
+
+    @property
+    def num_versions(self) -> int:
+        with self._cv:
+            return len(self._versions)
+
+    def versions(self) -> Tuple[int, ...]:
+        with self._cv:
+            return tuple(self._versions)
+
+    # ------------------------------------------------------------------
+    def publish(self, params, version: int, *, replace: bool = False):
+        """Make ``params`` available to the rollout side as ``version``.
+
+        Resharding (if configured) runs OUTSIDE the lock: jit dispatch is
+        async, so the trainer returns to its next step immediately while the
+        transfer executes; an ``acquire`` that picks the version up merely
+        holds future-backed arrays.
+
+        ``replace=True`` permits re-publishing the CURRENT latest version
+        (checkpoint restore swapping the weights behind an unchanged stage
+        number); versions are otherwise strictly monotonic.
+        """
+        if self._reshard is not None:
+            t0 = time.perf_counter()
+            params = self._reshard(params)
+            self.stats["reshard_time"] += time.perf_counter() - t0
+        with self._cv:
+            latest = next(reversed(self._versions)) if self._versions else -1
+            if version < latest or (version == latest and not replace):
+                raise ValueError(
+                    f"ParamStore.publish: version {version} <= latest "
+                    f"published {latest} — versions must be strictly "
+                    "monotonic (one publish per optimizer update)")
+            self._versions[version] = params
+            self.stats["published"] += 1
+            while len(self._versions) > self._max_versions:   # drop-stale
+                self._versions.popitem(last=False)
+                self.stats["dropped"] += 1
+            self._cv.notify_all()
+
+    def acquire(self) -> Tuple[Any, int]:
+        """Freshest ``(params, version)``. Rollout never generates under a
+        superseded version when a newer one has been published."""
+        with self._cv:
+            if not self._versions:
+                raise RuntimeError(
+                    "ParamStore.acquire before the first publish — the "
+                    "trainer must publish its initial params (version = "
+                    "start stage) at construction")
+            version = next(reversed(self._versions))
+            self.stats["acquired"] += 1
+            return self._versions[version], version
+
+    def get(self, version: int) -> Any:
+        """A specific in-flight version (KeyError if already dropped)."""
+        with self._cv:
+            return self._versions[version]
+
+    def wait_for(self, version: int, timeout: Optional[float] = None) -> bool:
+        """Block until ``latest_version >= version``. Returns False on
+        timeout. Used by tests and by disaggregated drivers that must not
+        start a stage before a minimum version landed."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._cv:
+            while not (self._versions
+                       and next(reversed(self._versions)) >= version):
+                remaining = (None if deadline is None
+                             else deadline - time.monotonic())
+                if remaining is not None and remaining <= 0:
+                    return False
+                self._cv.wait(timeout=remaining)
+            return True
+
+
+# ---------------------------------------------------------------------------
+# train-layout -> rollout-layout reshard
+# ---------------------------------------------------------------------------
+
+
+def make_param_resharder(cfg, params, train_mesh, rollout_mesh=None, *,
+                         serve_tp_only: bool = True):
+    """Build the device-to-device weight-sync transfer for one published
+    version: identity on values, train layout in, rollout layout out.
+
+    * ``train_mesh`` layout: the training shardings from
+      ``launch/sharding.py:params_shardings`` (Megatron TP over "model" ×
+      FSDP over "data").
+    * ``rollout_mesh`` layout: ``serve_tp_only=True`` — inference replicates
+      the FSDP axis (ZeRO weight gathers per decode step are what the serve
+      path must never pay), so the sync performs the one all-gather per
+      version *here*, off the decode critical path.
+
+    When both meshes are views of the same devices the reshard is a jitted
+    identity with explicit in/out shardings (XLA emits exactly the
+    collective traffic of the sync — ``launch/dryrun.py`` lowers this very
+    function on the production mesh). Across disjoint device sets it falls
+    back to ``jax.device_put`` (ICI/DCN transfer).
+
+    ``params`` may be a live tree or a ShapeDtypeStruct tree (dry-run).
+    Returns ``(reshard_fn, out_shardings)``.
+    """
+    from repro.launch import sharding as shd
+
+    rollout_mesh = rollout_mesh if rollout_mesh is not None else train_mesh
+    in_sh = shd.params_shardings(params, train_mesh, cfg=cfg)
+    out_sh = shd.params_shardings(params, rollout_mesh,
+                                  serve_tp_only=serve_tp_only, cfg=cfg)
+    same_devices = (train_mesh.devices.shape == rollout_mesh.devices.shape
+                    and (train_mesh.devices == rollout_mesh.devices).all())
+    if same_devices:
+        reshard = jax.jit(lambda p: p, in_shardings=(in_sh,),
+                          out_shardings=out_sh)
+    else:
+        def reshard(p):
+            return jax.device_put(p, out_sh)
+    return reshard, out_sh

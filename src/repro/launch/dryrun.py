@@ -326,6 +326,66 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
     return rec
 
 
+def run_reshard(arch: str, *, multi_pod: bool = False, mesh=None,
+                verbose: bool = True, cfg_override=None) -> dict:
+    """Lower + compile the versioned weight-sync reshard on the production
+    mesh: train layout (Megatron TP × FSDP) in, rollout layout
+    (``serve_tp_only`` — FSDP axis replicated) out.
+
+    This is the exact jitted transfer ``ParamStore.publish`` runs per
+    version in disaggregated mode (built by the same
+    ``core/weight_sync.make_param_resharder``) — what we dry-run is what we
+    sync. The interesting number is the collective bill: one all-gather of
+    every FSDP-sharded leaf per published version, paid off the decode
+    critical path instead of per decode step."""
+    from repro.core.weight_sync import make_param_resharder
+
+    cfg = cfg_override or get_config(arch)
+    rec = {"arch": arch, "shape": "weight_sync",
+           "mesh": "2x16x16" if multi_pod else "16x16", "status": "ok"}
+    mesh = mesh or make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod(list(mesh.shape.values())))
+    params_shape = jax.eval_shape(lambda k: M.init_params(k, cfg),
+                                  jax.random.PRNGKey(0))
+
+    t0 = time.perf_counter()
+    reshard, _out_sh = make_param_resharder(cfg, params_shape, mesh)
+    lowered = reshard.lower(params_shape)
+    t_lower = time.perf_counter() - t0
+    compiled = lowered.compile()
+    t_compile = time.perf_counter() - t0 - t_lower
+
+    hlo_text = compiled.as_text()
+    coll = collective_bytes(hlo_text)
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        for f in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes"):
+            if hasattr(ma, f):
+                mem[f] = int(getattr(ma, f))
+    except Exception as e:                                  # pragma: no cover
+        mem["error"] = str(e)
+
+    n_params = param_count(cfg)
+    sync_bytes = sum(
+        int(np.prod(l.shape)) * l.dtype.itemsize
+        for l in jax.tree.leaves(params_shape))
+    rec.update(
+        chips=chips, lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+        params=n_params, sync_bytes_per_version=sync_bytes,
+        collective_bytes={k: float(v) for k, v in coll.items()},
+        collective_s=coll.get("total", 0) / ICI_BW, memory=mem,
+    )
+    if verbose:
+        print(f"  [{rec['mesh']}] {arch} × weight_sync: "
+              f"{sync_bytes/2**30:.2f}GiB/version, collective "
+              f"{coll.get('total', 0)/2**30:.2f}GiB/device "
+              f"({rec['collective_s']*1e3:.2f}ms) "
+              f"(lower {t_lower:.0f}s compile {t_compile:.0f}s)")
+    return rec
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
@@ -333,6 +393,10 @@ def main(argv=None):
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--weight-sync", action="store_true",
+                    help="additionally lower the ParamStore reshard "
+                         "(train layout -> rollout serve_tp_only layout) "
+                         "for each arch")
     ap.add_argument("--out", default=None)
     args = ap.parse_args(argv)
 
@@ -350,11 +414,17 @@ def main(argv=None):
         mesh = make_production_mesh(multi_pod=mp)
         mname = "2x16x16" if mp else "16x16"
         for arch in archs:
-            for shape in shapes:
+            arch_shapes = list(shapes)
+            if args.weight_sync:
+                arch_shapes.append("weight_sync")
+            for shape in arch_shapes:
                 if (arch, shape, mname) in done:
                     continue
                 try:
-                    rec = run_one(arch, shape, multi_pod=mp, mesh=mesh)
+                    if shape == "weight_sync":
+                        rec = run_reshard(arch, multi_pod=mp, mesh=mesh)
+                    else:
+                        rec = run_one(arch, shape, multi_pod=mp, mesh=mesh)
                 except Exception as e:
                     rec = {"arch": arch, "shape": shape, "mesh": mname,
                            "status": "error", "error": str(e),

@@ -35,6 +35,31 @@ def make_cpu_mesh():
     return jax.make_mesh((1, 1), ("data", "model"))
 
 
+def make_disaggregated_meshes(train_shape=(2, 2), rollout_shape=(2, 2)):
+    """Disjoint train and rollout meshes over the visible devices: the
+    first ``prod(train_shape)`` devices train, the next
+    ``prod(rollout_shape)`` serve rollout. With disjoint device sets the
+    ParamStore reshard between the two layouts is a ``jax.device_put``
+    (ICI/DCN weight transfer) instead of a same-device relayout — the
+    Laminar-style separated rollout/train deployment."""
+    import numpy as np
+    from jax.sharding import Mesh
+
+    devs = jax.devices()
+    nt = int(np.prod(train_shape))
+    nr = int(np.prod(rollout_shape))
+    if nt + nr > len(devs):
+        raise ValueError(
+            f"disaggregated meshes need {nt}+{nr} devices, have "
+            f"{len(devs)} — shrink the shapes or raise "
+            "--xla_force_host_platform_device_count")
+    train = Mesh(np.asarray(devs[:nt]).reshape(train_shape),
+                 ("data", "model"))
+    rollout = Mesh(np.asarray(devs[nt:nt + nr]).reshape(rollout_shape),
+                   ("data", "model"))
+    return train, rollout
+
+
 def data_axes(mesh) -> tuple:
     """The axes a global batch shards over."""
     return ("pod", "data") if "pod" in mesh.axis_names else ("data",)

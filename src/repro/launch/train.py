@@ -45,7 +45,22 @@ def main(argv=None):
                          "runs on a background thread while stage k trains")
     ap.add_argument("--max-staleness", type=int, default=1,
                     help="max optimizer updates the train step may be ahead "
-                         "of the params that generated its batch")
+                         "of the params that generated its batch (K > 1 = "
+                         "multi-step async pipeline)")
+    ap.add_argument("--disaggregated", action="store_true",
+                    help="route every published params version through the "
+                         "versioned ParamStore reshard (train FSDP layout "
+                         "-> rollout serve_tp_only layout); requires "
+                         "--overlap")
+    ap.add_argument("--adaptive-concurrency", action="store_true",
+                    help="overlap-aware N' controller: adjust the in-flight "
+                         "rollout target between stages from observed "
+                         "rollout-vs-train timing")
+    ap.add_argument("--concurrency-min", type=int, default=0,
+                    help="adaptive N' lower bound (0 = concurrency // 4)")
+    ap.add_argument("--concurrency-max", type=int, default=0,
+                    help="adaptive N' upper bound (0 = concurrency; the "
+                         "slot pool is sized to this)")
     ap.add_argument("--sft-warmup", type=int, default=150)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="runs/default")
@@ -72,14 +87,19 @@ def main(argv=None):
 
     ro = RolloutConfig(batch_size=args.batch_size, group_size=args.group_size,
                        max_prompt_len=16, max_response_len=args.max_response,
-                       concurrency=args.concurrency, mode=args.mode)
+                       concurrency=args.concurrency, mode=args.mode,
+                       adaptive_concurrency=args.adaptive_concurrency,
+                       concurrency_min=args.concurrency_min,
+                       concurrency_max=args.concurrency_max)
     tc = TrainConfig(lr=args.lr, warmup_steps=5, total_steps=args.steps,
                      use_is_correction=not args.no_is, seed=args.seed,
-                     overlap=args.overlap, max_staleness=args.max_staleness)
+                     overlap=args.overlap, max_staleness=args.max_staleness,
+                     disaggregated=args.disaggregated)
     tr = CoPRISTrainer(cfg, ro, tc, task, eos_id=EOS, params=params)
     if args.resume:
-        tr.opt_state = state["opt_state"]
-        tr.stage = state["stage"]
+        # restore republishes through the ParamStore so the rollout side
+        # acquires the checkpointed weights, not the construction version
+        tr.restore(opt_state=state["opt_state"], stage=state["stage"])
 
     mpath = os.path.join(args.out, "metrics.jsonl")
     try:
@@ -92,6 +112,8 @@ def main(argv=None):
                     stale = (f" stale={out['param_staleness']}"
                              f" saved={out['overlap_saved_time']:.1f}s"
                              if args.overlap else "")
+                    if args.adaptive_concurrency:
+                        stale += f" N'={out['concurrency_target']}"
                     print(f"step {out['step']:4d} reward={out['reward_mean']:.3f} "
                           f"loss={out['pg_loss']:+.4f} ratio={out['ratio_mean']:.3f} "
                           f"off={out['off_policy_frac']:.2f} "

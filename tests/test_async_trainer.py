@@ -157,6 +157,57 @@ def test_overlap_staleness_accounting(init_params):
         tr.close()
 
 
+def test_multi_step_staleness_pipeline(init_params):
+    """max_staleness=2 is a real multi-step pipeline: the producer may run
+    up to two optimizer updates ahead, every consumed batch's params gap
+    stays <= 2, and the ParamStore holds at most K+1 in-flight versions
+    (older ones dropped Laminar-style)."""
+    tr = _trainer(init_params, overlap=True, max_staleness=2)
+    tr.batch_timeout = 120.0
+    n = 6
+    try:
+        outs = [tr.step() for _ in range(n)]
+    finally:
+        tr.close()
+    assert [o["step"] for o in outs] == list(range(n))
+    for o in outs:
+        assert 0 <= o["param_staleness"] <= 2
+        assert np.isfinite(o["pg_loss"])
+        assert o["param_store_versions"] <= 3       # K + 1 window
+    # one publish per optimizer update (plus the construction version)
+    assert tr.param_store.stats["published"] == n + 1
+    assert tr.param_store.latest_version == n
+    # tokens never come from the future and respect the K=2 gate
+    stages = tr.last_batch["stage_ids"]
+    resp = stages >= 0
+    assert (stages[resp] <= outs[-1]["step"]).all()
+    assert (stages[resp] >= outs[-1]["step"] - 2 - 1).all()
+
+
+def test_adaptive_concurrency_trainer_smoke(init_params):
+    """adaptive_concurrency: each stage's collect runs under the
+    controller's current target, the reported target stays within the
+    configured bounds, and the controller's trace covers every stage."""
+    task = AdditionTask(max_value=9, seed=0)
+    ro = RolloutConfig(**{**RO, "adaptive_concurrency": True,
+                          "concurrency_min": 2, "concurrency_max": 16})
+    tc = TrainConfig(**TC, overlap=True, seed=0)
+    tr = CoPRISTrainer(CFG, ro, tc, task, eos_id=EOS,
+                       params=jax.tree.map(jnp.copy, init_params))
+    tr.batch_timeout = 120.0
+    # the slot pool is sized to the adaptive upper bound, not static N'
+    assert tr.engine.pool == 16
+    try:
+        outs = [tr.step() for _ in range(4)]
+    finally:
+        tr.close()
+    for o in outs:
+        assert 2 <= o["concurrency_target"] <= 16
+    trace = tr._concurrency_ctrl.trace
+    assert len(trace) >= len(outs)
+    assert all(2 <= t <= 16 for t in trace)
+
+
 def test_collect_is_single_owner(init_params):
     """The engine owns its donated KV cache: a second concurrent collect
     must be refused loudly (the overlapped trainer drives collect from one

@@ -39,6 +39,33 @@ print(json.dumps([{k: r[k] for k in ("arch", "shape", "status", "dominant")}
 
 
 @pytest.mark.slow
+def test_dryrun_weight_sync_reshard_compiles():
+    """The ParamStore reshard (train FSDP layout -> rollout serve_tp_only
+    layout) lowers + compiles on the 256-device production mesh, and its
+    collective bill is all-gather only: the sync pays the one FSDP weight
+    gather per published version OFF the decode critical path — a reshard
+    that lowers to anything else (e.g. per-leaf permutes from a bad spec)
+    is a regression."""
+    code = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import json
+from repro.launch.dryrun import run_reshard
+r = run_reshard("llama3.2-1b", verbose=False)
+print(json.dumps({"status": r["status"], "chips": r["chips"],
+                  "coll": r["collective_bytes"],
+                  "sync_bytes": r["sync_bytes_per_version"]}))
+"""
+    r = _run(code)
+    assert r.returncode == 0, r.stderr[-2000:]
+    rec = json.loads(r.stdout.strip().splitlines()[-1])
+    assert rec["status"] == "ok" and rec["chips"] == 256
+    assert rec["sync_bytes"] > 0
+    kinds = {k for k, v in rec["coll"].items() if k != "total" and v > 0}
+    assert kinds == {"all-gather"}, rec["coll"]
+
+
+@pytest.mark.slow
 def test_dryrun_multipod_compiles():
     code = """
 import os
