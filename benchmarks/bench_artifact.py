@@ -1,0 +1,71 @@
+"""Per-PR benchmark artifact.
+
+Runs the cheap, CI-safe subset of the benchmark harness — the kernel
+microbenchmarks (including the paged-vs-dense decode-attention comparison),
+the analytic decode-attention rooflines, and the real-engine equal-HBM
+concurrency row — and writes one JSON blob CI uploads per PR, so paged/dense
+regressions show up as an artifact diff rather than a silent drift.
+
+    PYTHONPATH=src python -m benchmarks.bench_artifact --out BENCH_paged_kv.json
+
+Exits nonzero if a kernel interpret-mode correctness check FAILs (timing
+ratios are recorded but never gate CI — container CPUs are too noisy)."""
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import sys
+
+import jax
+
+
+def collect() -> dict:
+    from benchmarks import kernelbench, rooflines, table2_concurrency
+
+    rows = []
+    kernelbench.main(rows)
+    rows.extend(rooflines.kernel_rows())
+    rows.append(table2_concurrency.kv_equal_hbm_row())
+
+    by_name = {n: (v, d) for n, v, d in rows}
+    dense = by_name["kernel_decode_attn_ref_4k"][0]
+    paged = by_name["kernel_paged_decode_attn_ref_4k"][0]
+    return {
+        "backend": jax.default_backend(),
+        "machine": platform.machine(),
+        "rows": [{"name": n, "us_per_call": v, "derived": d}
+                 for n, v, d in rows],
+        "paged_vs_dense": {
+            "decode_attn_ref_ratio": paged / dense,
+            "kv_equal_hbm_live_slot_ratio":
+                by_name["table2_kv_equal_hbm_256tok"][0],
+            "hbm_bytes_saving_16k":
+                by_name["roofline_decode_attn_paged_saving"][0],
+        },
+        "checks": {
+            n: d.endswith("PASS")
+            for n, (_, d) in by_name.items() if "pallas_check" in n
+        },
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_paged_kv.json")
+    args = ap.parse_args(argv)
+    blob = collect()
+    with open(args.out, "w") as f:
+        json.dump(blob, f, indent=1)
+    print(f"wrote {args.out}")
+    for k, v in blob["paged_vs_dense"].items():
+        print(f"  {k}: {v:.2f}")
+    bad = [n for n, ok in blob["checks"].items() if not ok]
+    if bad:
+        print(f"FAILED correctness checks: {bad}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

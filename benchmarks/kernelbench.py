@@ -45,8 +45,28 @@ def main(rows_out):
     vc = jax.random.normal(key, (8, 4096, 2, 64))
     cl = jnp.full((8,), 4000)
     f = jax.jit(lambda q, k, v, c: decode_attention(q, k, v, c))
-    rows_out.append(("kernel_decode_attn_ref_4k", _time(f, qd, kc, vc, cl),
-                     "B8 L4096 H8 KV2"))
+    t_dense = _time(f, qd, kc, vc, cl)
+    rows_out.append(("kernel_decode_attn_ref_4k", t_dense, "B8 L4096 H8 KV2"))
+
+    # paged decode attention ref: SAME workload, cache bytes rearranged into
+    # shuffled physical pages reached through a block table — measures the
+    # gather indirection cost against the contiguous dense path above
+    # (acceptance: within 1.3x of dense)
+    from repro.kernels.paged_decode_attn.ref import paged_decode_attention
+    ps, mp = 128, 4096 // 128
+    kp = kc.reshape(8 * mp, ps, 2, 64)
+    vp = vc.reshape(8 * mp, ps, 2, 64)
+    perm = np.random.default_rng(0).permutation(8 * mp).astype(np.int32)
+    kp = kp[perm]                      # physical pages shuffled...
+    vp = vp[perm]
+    bt = jnp.asarray(np.argsort(perm).reshape(8, mp)
+                     .astype(np.int32))  # ...and the block table walks back
+    f = jax.jit(lambda q, kp_, vp_, b, c: paged_decode_attention(
+        q, kp_, vp_, b, ps, c))
+    t_paged = _time(f, qd, kp, vp, bt, cl)
+    rows_out.append(("kernel_paged_decode_attn_ref_4k", t_paged,
+                     f"B8 pages{mp}x{ps} H8 KV2 "
+                     f"ratio_vs_dense={t_paged / t_dense:.2f}"))
 
     # wkv6 ref
     from repro.models.rwkv6 import wkv6_scan
@@ -84,4 +104,23 @@ def main(rows_out):
     o2 = fa_ref.naive_attention(q, k, v)
     err = float(jnp.max(jnp.abs(o1 - o2)))
     rows_out.append(("kernel_flash_attn_pallas_check", err,
+                     f"interpret_allclose={'PASS' if err < 1e-4 else 'FAIL'}"))
+
+    from repro.kernels.paged_decode_attn import ops as pda_ops
+    B, NP, mp2, ps2 = 2, 12, 4, 16
+    ks = jax.random.split(key, 3)
+    q2 = jax.random.normal(ks[0], (B, 1, 8, 64))
+    kp2 = jax.random.normal(ks[1], (NP, ps2, 2, 64))
+    vp2 = jax.random.normal(ks[2], (NP, ps2, 2, 64))
+    cl2 = jnp.array([mp2 * ps2 - 3, 17])
+    rng = np.random.default_rng(1)
+    bt2 = np.full((B, mp2), NP, np.int32)
+    for b in range(B):
+        npg = -(-int(cl2[b]) // ps2)
+        bt2[b, :npg] = rng.choice(NP, npg, replace=False)
+    o1 = pda_ops.paged_decode_attention(q2, kp2, vp2, jnp.asarray(bt2),
+                                        ps2, cl2)
+    o2 = paged_decode_attention(q2, kp2, vp2, jnp.asarray(bt2), ps2, cl2)
+    err = float(jnp.max(jnp.abs(o1 - o2)))
+    rows_out.append(("kernel_paged_decode_attn_pallas_check", err,
                      f"interpret_allclose={'PASS' if err < 1e-4 else 'FAIL'}"))

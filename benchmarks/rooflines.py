@@ -47,7 +47,40 @@ def rows(path=None):
     return out
 
 
+def kernel_rows():
+    """Analytic decode-attention roofline, dense vs paged KV (v5p machine
+    constants). Single-token decode is pure HBM streaming (O(1) FLOP/byte),
+    so time == bytes/BW; the dense kernel must stream every slot's full
+    max_len cache region while the paged kernel's run-gated page grid
+    streams only the pages each sequence has mapped — bytes scale with the
+    MEAN occupied length, not the max."""
+    from repro.launch.mesh import HBM_BW
+    B, KV, hd, bytes_el = 256, 8, 128, 2        # serving shape, bf16 cache
+    max_len, mean_len, ps = 16384, 2048, 128
+    per_tok = KV * hd * bytes_el * 2            # k + v bytes per cached token
+    dense_b = B * max_len * per_tok
+    paged_b = (B * _round_up(mean_len, ps) * per_tok
+               + B * (max_len // ps) * 4)       # mapped pages + block table
+    out = []
+    for name, byts in (("dense", dense_b), ("paged", paged_b)):
+        t = byts / HBM_BW
+        out.append((f"roofline_decode_attn_{name}_16k", t * 1e6,
+                    f"memory={t*1e3:.2f}ms bytes={byts/2**30:.2f}GiB "
+                    f"B{B} KV{KV} hd{hd} max_len={max_len} "
+                    f"mean_len={mean_len}"))
+    out.append(("roofline_decode_attn_paged_saving", dense_b / paged_b,
+                f"dense/paged HBM-bytes ratio at mean_len={mean_len} "
+                f"(page_size={ps}); equals the extra concurrency the same "
+                "HBM budget can hold"))
+    return out
+
+
+def _round_up(n, m):
+    return -(-n // m) * m
+
+
 def main(rows_out):
+    rows_out.extend(kernel_rows())
     rows_out.extend(rows())
     # multi-pod summary line
     mp = load(os.path.join(BASE, "dryrun_multipod.json"))

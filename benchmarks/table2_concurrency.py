@@ -15,7 +15,48 @@ from benchmarks.sim import ClusterModel, LengthModel, run_steps
 from benchmarks.table1_end2end import PAPER_CLUSTER, PAPER_LENGTHS
 
 
+def kv_equal_hbm_row():
+    """Real-engine (tiny model) comparison at EQUAL KV HBM budget: the
+    dense backend spends max_len tokens of cache per slot no matter how
+    short the trajectory, so a 256-token budget caps it at 4 slots; the
+    paged backend spends pages only for tokens actually decoded (plus
+    prefix sharing across each group), so the same budget sustains >= 2x
+    the concurrently-live slots."""
+    import jax
+
+    from repro.common.config import RolloutConfig
+    from repro.configs import get_config
+    from repro.core.rollout import RolloutEngine
+    from repro.data.tasks import AdditionTask, EOS
+    from repro.models import model as M
+
+    cfg = get_config("tiny")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+
+    def run(backend, conc, npg, ps):
+        task = AdditionTask(max_value=20, seed=9)
+        ro = RolloutConfig(batch_size=6, group_size=2, max_prompt_len=16,
+                          max_response_len=48, concurrency=conc,
+                          mode="copris", decode_chunk=4, kv_backend=backend,
+                          kv_page_size=ps, kv_num_pages=npg)
+        eng = RolloutEngine(cfg, ro, task.sample_prompt, eos_id=EOS)
+        _, s = eng.collect(params, 0, jax.random.PRNGKey(42))
+        return s["active_slot_steps"] / max(1, s["decode_steps"]), s
+
+    # max_len rounds to 64 -> dense budget: 4 slots x 64 = 256 KV tokens;
+    # paged gets the SAME 256 tokens as 64 pages of 4
+    dense_live, _ = run("dense", 4, 0, 16)
+    paged_live, sp = run("paged", 12, 64, 4)
+    return ("table2_kv_equal_hbm_256tok", paged_live / dense_live,
+            f"dense_live_slots={dense_live:.1f} "
+            f"paged_live_slots={paged_live:.1f} "
+            f"blocked={sp['admission_blocked']} "
+            f"preempted={sp['page_preemptions']} "
+            f"shared_rows={sp['shared_prefill_rows']}")
+
+
 def main(rows_out):
+    rows_out.append(kv_equal_hbm_row())
     cases = [("naive_partial", 1536), ("copris", 512), ("copris", 1024),
              ("copris", 1536), ("copris", 2048)]
     for mode, conc in cases:

@@ -1,11 +1,34 @@
-"""Batched serving with the concurrency-controlled slot engine across
-architecture families (dense / SSM / MoE / hybrid), smoke-sized on CPU.
+"""Batched serving with the typed submit()/step() API across architecture
+families (dense / SSM / MoE / hybrid), smoke-sized on CPU. Demonstrates the
+incremental loop external callers own: submit requests, step the engine one
+decode chunk at a time, stream a partial response mid-flight, and late-submit
+while earlier requests are still decoding.
 
     PYTHONPATH=src python examples/serve_batch.py
 """
-from repro.launch.serve import main
+import numpy as np
+
+from repro.launch.serve import GenerateRequest, make_serve_engine
 
 for arch in ("llama3.2-1b", "rwkv6-1.6b", "deepseek-moe-16b", "hymba-1.5b"):
     print(f"\n=== serving {arch} (smoke) ===")
-    main(["--arch", arch, "--smoke", "--requests", "6", "--concurrency", "3",
-          "--max-tokens", "16"])
+    serve, cfg = make_serve_engine(arch, smoke=True, max_tokens=16,
+                                   concurrency=3)
+    rng = np.random.default_rng(0)
+    rids = [serve.submit(GenerateRequest(prompt=rng.integers(
+        0, cfg.vocab_size, 8))) for _ in range(4)]
+    steps = 0
+    while serve.pending:
+        for r in serve.step():
+            print(f"  req {r.request_id}: {len(r.tokens)} tokens "
+                  f"({r.finish_reason})")
+        steps += 1
+        if steps == 1:                 # stream a partial, late-submit more
+            partial = serve.peek(rids[-1])
+            if partial is not None:
+                print(f"  req {rids[-1]} streaming: {partial}")
+            rids += [serve.submit(GenerateRequest(prompt=rng.integers(
+                0, cfg.vocab_size, 8))) for _ in range(2)]
+    stats = serve.close()
+    print(f"  {len(rids)} requests in {steps} engine steps, "
+          f"utilization {stats['utilization']:.2f}")

@@ -289,6 +289,24 @@ class RolloutConfig:
     adaptive_concurrency: bool = False
     concurrency_min: int = 0
     concurrency_max: int = 0
+    # --- KV cache backend (sampling/kv_cache.py CacheBackend) ---
+    # "dense": one max_len KV region per slot (bit-identical to the
+    # historical engine). "paged": vLLM-style paged KV — physical page pools
+    # shared by all slots, block-table indirection, copy-on-write prefix
+    # sharing (one prefill per GRPO group) and page-gated continuous-batching
+    # admission. Trajectory content is bit-identical across backends (the
+    # per-trajectory PRNG streams are slot/layout independent).
+    kv_backend: str = "dense"          # dense | paged
+    kv_page_size: int = 16             # tokens per KV page (paged only)
+    # Physical pages in the pool. 0 = slot_pool * max_len / page_size (the
+    # dense-equivalent HBM budget — no admission pressure). Smaller values
+    # trade admission stalls for memory: each slot only consumes pages for
+    # tokens it has actually generated, so at equal HBM a paged pool admits
+    # ~max_len/mean_len times more concurrent slots.
+    kv_num_pages: int = 0
+    # Share a group's common prompt pages across its G samples (refcounted,
+    # COW on first divergent write): one prefill feeds the whole group.
+    kv_prefix_sharing: bool = True
 
     @property
     def resolved_concurrency_min(self) -> int:
@@ -319,6 +337,16 @@ class RolloutConfig:
         if self.resume_strategy not in ("reprefill", "kv_snapshot"):
             raise ValueError(
                 f"unknown resume strategy {self.resume_strategy!r}")
+        if self.kv_backend not in ("dense", "paged"):
+            raise ValueError(
+                f"unknown kv_backend {self.kv_backend!r} (dense|paged)")
+        if self.kv_page_size < 1:
+            raise ValueError(
+                f"kv_page_size must be >= 1, got {self.kv_page_size}")
+        if self.kv_num_pages < 0:
+            raise ValueError(
+                f"kv_num_pages must be >= 0 (0 = dense-equivalent budget), "
+                f"got {self.kv_num_pages}")
         if self.concurrency_min < 0 or self.concurrency_max < 0:
             raise ValueError(
                 "concurrency_min/concurrency_max must be >= 0 (0 = derive "

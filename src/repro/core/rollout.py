@@ -107,7 +107,16 @@ class RolloutEngine:
         self._chunk = ro_cfg.decode_chunk
 
         self.buffer = TrajectoryBuffer()
-        self.cache = M.init_cache(model_cfg, self.pool, self.max_len)
+        # the cache lives behind a CacheBackend: "dense" is the historical
+        # one-region-per-slot layout, "paged" shares physical page pools
+        # across slots with block-table indirection (admission then gates on
+        # free PAGES, not free slots — continuous batching)
+        self.backend = kvc.make_backend(
+            ro_cfg.kv_backend, model_cfg, self.pool, self.max_len,
+            page_size=ro_cfg.kv_page_size, num_pages=ro_cfg.kv_num_pages)
+        # pages promised to dispatched-but-not-yet-prefilled work
+        self._reserved_pages = 0
+        self._reservations = {}        # traj_id -> reserved page count
         self.cache_len = np.zeros(self.pool, np.int32)
         self.last_token = np.zeros(self.pool, np.int32)
         self.slot_gid = np.zeros(self.pool, np.int32)   # key-stream identity
@@ -123,6 +132,9 @@ class RolloutEngine:
         self._collect_guard = threading.Lock()
 
         # ---- jitted engine steps -------------------------------------
+        is_paged = self.backend.is_paged          # static: baked into jits
+        page_size = ro_cfg.kv_page_size
+
         def _sample_step(logits, cache_len, active, aux):
             """Device-side sample + stop detection via the SAME predicate as
             the host's _maybe_done (`stop_flags`). Slot invariant entering a
@@ -142,36 +154,60 @@ class RolloutEngine:
 
         @functools.partial(jax.jit, donate_argnums=(1,))
         def _decode_chunk(params, cache, last_token, cache_len, active,
-                          resp_len, gid, sidx, stage_key):
+                          resp_len, gid, sidx, stage_key, block_table):
+            # block_table is a jit ARGUMENT (never a closure — a closed-over
+            # jnp array would bake into the executable as a constant); dense
+            # mode passes a (1, 1) dummy so both backends share one signature
             slot_keys = _fold_slot_keys(stage_key, gid, sidx)
             (cache, *_), ys = M.decode_scan(
                 params, model_cfg, cache, last_token, cache_len, active,
                 (resp_len, slot_keys), steps=self._chunk,
                 step_fn=_sample_step, media=self._media_for(self.pool),
-                use_pallas=use_pallas)
+                use_pallas=use_pallas,
+                paged=(block_table, page_size) if is_paged else None)
             return cache, ys
 
         @functools.partial(jax.jit, donate_argnums=(1,))
-        def _prefill_batch(params, cache, tokens, lengths, slot_ids, gid,
-                           sidx, resp_idx, stage_key):
+        def _prefill_batch(params, cache, tokens, lengths, slot_ids, row_map,
+                           flat_pos, gid, sidx, resp_idx, stage_key):
             # scratch is sized to the prompt bucket S, not max_len — a
             # whole-pool initial fill must not transiently double the
-            # pool cache; insert_slots_prefix writes the S-long prefix
+            # pool cache; the backend insert writes the S-long prefix.
+            # tokens holds one row per UNIQUE prompt; row_map maps each
+            # output sample to its row (identity for dense — prefix sharing
+            # lets a whole GRPO group ride on one prefill row)
             n, S = tokens.shape
             scratch = M.init_cache(model_cfg, n, S)
             logits, scratch = M.prefill(params, model_cfg, tokens, lengths,
                                         scratch, media=self._media_for(n),
                                         use_pallas=use_pallas)
+            logits = jnp.take(logits, row_map, axis=0, mode="clip")
             keys = jax.vmap(jax.random.fold_in)(
                 _fold_slot_keys(stage_key, gid, sidx), resp_idx)
             tok, logp = sampler.sample_rows(
                 keys, logits, temperature=ro_cfg.temperature,
                 top_p=ro_cfg.top_p, top_k=ro_cfg.top_k)
-            cache = kvc.insert_slots_prefix(cache, scratch, slot_ids)
+            if is_paged:
+                cache = kvc.paged_insert_rows(cache, scratch, slot_ids,
+                                              row_map, flat_pos)
+            else:
+                cache = kvc.dense_insert_rows(cache, scratch, slot_ids,
+                                              row_map)
             return tok, logp, cache
 
         self._decode_chunk_fn = _decode_chunk
         self._prefill_batch_fn = _prefill_batch
+
+    # ------------------------------------------------------------------
+    @property
+    def cache(self):
+        """Device cache pytree, owned by the backend (donated by the jitted
+        engine steps and reassigned after every call)."""
+        return self.backend.cache
+
+    @cache.setter
+    def cache(self, value):
+        self.backend.cache = value
 
     # ------------------------------------------------------------------
     def _media_for(self, batch):
@@ -180,8 +216,14 @@ class RolloutEngine:
         m = jnp.asarray(self.media)
         return jnp.broadcast_to(m[None], (batch,) + m.shape)
 
-    def _new_group(self) -> Group:
-        prompt, answer = self.prompt_source()
+    def _new_group(self) -> Optional[Group]:
+        # a prompt source may return None to DECLINE (finite workloads: a
+        # serving queue that is currently empty) — the scheduler then leaves
+        # the slot idle instead of opening a group with no prompt
+        src = self.prompt_source()
+        if src is None:
+            return None
+        prompt, answer = src
         g = Group(group_id=self._group_counter, prompt_tokens=np.asarray(prompt, np.int32),
                   answer=answer, size=self.ro.group_size)
         self._answers[g.group_id] = answer
@@ -215,9 +257,11 @@ class RolloutEngine:
         continuation attends to STALE K/V, so the effective behaviour
         distribution is not any single policy's (bias/throughput tradeoff
         the paper avoids by buffering tokens, not KV; measured in
-        tests/test_kv_snapshot.py)."""
-        self.cache = kvc.insert_slots(self.cache, traj.kv_snapshot,
-                                      jnp.asarray([i]))
+        tests/test_kv_snapshot.py). Routed through the backend: dense
+        snapshots are per-slot cache slices, paged snapshots are page LISTS
+        (scattered back into freshly allocated physical pages — never
+        densified)."""
+        self.backend.insert_snapshot(traj.kv_snapshot, i)
         self.slots[i] = traj
         self.cache_len[i] = traj.snap_cache_len
         self.last_token[i] = traj.snap_last_token
@@ -228,32 +272,77 @@ class RolloutEngine:
         self._stats["snapshot_resumes"] = \
             self._stats.get("snapshot_resumes", 0) + 1
 
+    def _admission_cost(self, traj: Trajectory, fresh_gids: set) -> int:
+        """Worst-case free pages this admission needs (paged backend):
+        snapshot restores bill their exact page count; prefills bill pages
+        through the first decode chunk; a fresh spawn whose group primary is
+        already admitted only bills pages past the shared full prompt
+        pages."""
+        if (self.ro.resume_strategy == "kv_snapshot"
+                and traj.kv_snapshot is not None):
+            return self.backend.snapshot_pages(traj.kv_snapshot)
+        shared = (self.ro.kv_prefix_sharing and traj.response_len == 0
+                  and traj.group_id in fresh_gids)
+        return self.backend.admission_pages(traj.total_len,
+                                            lookahead=self._chunk,
+                                            shared=shared)
+
     def _dispatch_refills(self, idxs, sched: ConcurrencyScheduler):
         """Decide what fills freed slots, in slot order (one sequential
         scheduler dispatch per slot, so scheduling policy is invariant to
         the decode chunk size). kv_snapshot resumes are restored in place
         (device scatter, no host sync); re-prefill trajectories are
-        returned as (slot, traj) pairs for the batched prefill."""
+        returned as (slot, traj) pairs for the batched prefill.
+
+        Paged backend: admission is additionally gated on free PAGES —
+        continuous batching. A dispatch the page budget cannot cover is
+        handed back to the scheduler (requeue, redispatched with priority)
+        and the remaining freed slots stay idle this round; they are
+        re-offered at the next chunk boundary, when decode/finishes may
+        have freed pages."""
         pending: List[Tuple[int, Trajectory]] = []
         queue = list(idxs)
+        paged = self.backend.is_paged
+        if paged:
+            budget = self.backend.free_page_count() - self._reserved_pages
+            fresh_gids = set()         # groups with an admitted fresh spawn
         while queue and not sched.done:
             batch = sched.next_requests(len(queue))
             exhausted = len(batch) < len(queue)
             redo = []
-            for i, traj in zip(queue, batch):
+            blocked = False
+            for bi, (i, traj) in enumerate(zip(queue, batch)):
+                if paged:
+                    cost = self._admission_cost(traj, fresh_gids)
+                    if cost > budget:
+                        # hand this and every later dispatch of the batch
+                        # back — scheduler order is priority order
+                        for t2 in batch[bi:]:
+                            sched.requeue(t2)
+                        self._stats["admission_blocked"] += \
+                            len(batch) - bi
+                        blocked = True
+                        break
+                    budget -= cost
                 if (self.ro.resume_strategy == "kv_snapshot"
                         and traj.kv_snapshot is not None):
-                    self._resume_snapshot(i, traj)
+                    self._resume_snapshot(i, traj)   # allocates pages now
                     reason = self._maybe_done(traj)
                     if reason is not None:
                         self._finish(traj, reason, sched)
                         self.slots[i] = None
+                        self.backend.free_slot(i)
                         sched.harvest()
                         redo.append(i)
                 else:
+                    if paged:
+                        self._reserved_pages += cost
+                        self._reservations[traj.traj_id] = cost
+                        if traj.response_len == 0:
+                            fresh_gids.add(traj.group_id)
                     pending.append((i, traj))
             queue = redo
-            if exhausted:
+            if exhausted or blocked:
                 break
         return pending
 
@@ -262,44 +351,91 @@ class RolloutEngine:
         common PREFILL_BUCKET length, row count padded to a power of two
         (padding rows scatter to the out-of-bounds slot id ``pool`` and
         are dropped). Returns the rows that finished immediately (their
-        very first sampled token already ended the trajectory)."""
+        very first sampled token already ended the trajectory).
+
+        Prefix sharing (paged backend): fresh same-group spawns collapse
+        onto ONE prefill row — the first ("primary") slot allocates and
+        fills the prompt pages, the other G-1 members just point their
+        block tables at them (refcounted; copy-on-write restores
+        exclusivity on the first divergent write). Each member still
+        samples its own first token from the shared row's logits under its
+        own PRNG stream, so trajectory content is unchanged."""
         fulls = [t.full_tokens() for _, t in pending]
         lens = [len(f) for f in fulls]
         for L in lens:
             assert L < self.max_len, \
                 f"trajectory length {L} >= max_len {self.max_len}"
+        paged = self.backend.is_paged
+        if paged:
+            for _, traj in pending:
+                self._reserved_pages -= self._reservations.pop(
+                    traj.traj_id, 0)
+        share = self.backend.supports_sharing and self.ro.kv_prefix_sharing
+        # row assignment: one row per unique prefill
+        rows = []                      # (full_tokens, L, primary_slot)
+        row_of_gid = {}
+        row_map, primary = [], []
+        for (i, traj), f, L in zip(pending, fulls, lens):
+            fresh = traj.response_len == 0
+            if share and fresh and traj.group_id in row_of_gid:
+                row_map.append(row_of_gid[traj.group_id])
+                primary.append(False)
+            else:
+                r = len(rows)
+                rows.append((f, L, i))
+                if share and fresh:
+                    row_of_gid[traj.group_id] = r
+                row_map.append(r)
+                primary.append(True)
         S = _round_up(max(lens), PREFILL_BUCKET)
-        nb = 1 << (len(pending) - 1).bit_length()
-        tokens = np.zeros((nb, S), np.int32)
-        lengths = np.ones(nb, np.int32)
-        slot_ids = np.full(nb, self.pool, np.int32)   # OOB rows -> dropped
-        gid = np.zeros(nb, np.int32)
-        sidx = np.zeros(nb, np.int32)
-        resp_idx = np.zeros(nb, np.int32)
-        for r, ((i, traj), f, L) in enumerate(zip(pending, fulls, lens)):
+        nr = 1 << (len(rows) - 1).bit_length()
+        ns = 1 << (len(pending) - 1).bit_length()
+        tokens = np.zeros((nr, S), np.int32)
+        lengths = np.ones(nr, np.int32)
+        if paged:
+            oob = self.backend.num_pages * self.backend.page_size
+            flat_pos = np.full((nr, S), oob, np.int32)  # OOB -> dropped
+        else:
+            flat_pos = np.zeros((1, 1), np.int32)       # unused dummy
+        for r, (f, L, islot) in enumerate(rows):
             tokens[r, :L] = f
             lengths[r] = L
-            slot_ids[r] = i
-            gid[r] = traj.group_id
-            sidx[r] = traj.sample_idx
-            resp_idx[r] = traj.response_len
+            if paged:
+                flat_pos[r, :L] = self.backend.alloc_slot_prefix(islot, L)
+            self._stats["prefill_tokens"] += L
+        slot_ids = np.full(ns, self.pool, np.int32)   # OOB rows -> dropped
+        rmap = np.zeros(ns, np.int32)
+        gid = np.zeros(ns, np.int32)
+        sidx = np.zeros(ns, np.int32)
+        resp_idx = np.zeros(ns, np.int32)
+        for s, ((i, traj), r, prim) in enumerate(
+                zip(pending, row_map, primary)):
+            slot_ids[s] = i
+            rmap[s] = r
+            gid[s] = traj.group_id
+            sidx[s] = traj.sample_idx
+            resp_idx[s] = traj.response_len
+            if paged and not prim:
+                self.backend.share_slots(rows[r][2], i, rows[r][1])
+                self._stats["shared_prefill_rows"] += 1
         tok, logp, self.cache = self._prefill_batch_fn(
-            params, self.cache, jnp.asarray(tokens),
-            jnp.asarray(lengths), jnp.asarray(slot_ids), jnp.asarray(gid),
-            jnp.asarray(sidx), jnp.asarray(resp_idx), stage_key)
+            params, self.cache, jnp.asarray(tokens), jnp.asarray(lengths),
+            jnp.asarray(slot_ids), jnp.asarray(rmap), jnp.asarray(flat_pos),
+            jnp.asarray(gid), jnp.asarray(sidx), jnp.asarray(resp_idx),
+            stage_key)
         tok, logp = jax.device_get((tok, logp))
         self._stats["prefill_calls"] += 1
+        self._stats["prefill_rows"] += len(rows)
         self._stats["host_syncs"] += 1
         finished = []
-        for r, (i, traj) in enumerate(pending):
-            traj.append(int(tok[r]), float(logp[r]), self._stage)
+        for s, (i, traj) in enumerate(pending):
+            traj.append(int(tok[s]), float(logp[s]), self._stage)
             self.slots[i] = traj
-            self.cache_len[i] = lens[r]
-            self.last_token[i] = int(tok[r])
+            self.cache_len[i] = lens[s]
+            self.last_token[i] = int(tok[s])
             self.slot_gid[i] = traj.group_id
             self.slot_sidx[i] = traj.sample_idx
             self._stats["prefill_count"] += 1
-            self._stats["prefill_tokens"] += lens[r]
             if traj.resume_count > 0 and traj.response_len > 1:
                 self._stats["resumed"] += 1
             reason = self._maybe_done(traj)
@@ -321,11 +457,64 @@ class RolloutEngine:
             for i, traj, reason in finished:
                 self._finish(traj, reason, sched)
                 self.slots[i] = None
+                self.backend.free_slot(i)
                 freed.append(i)
             pending = []
             if freed:
                 sched.harvest()
                 pending = self._dispatch_refills(freed, sched)
+
+    def _preempt_slot(self, i: int, sched: ConcurrencyScheduler):
+        """Evict a live slot mid-stage to free its pages. The trajectory
+        keeps everything generated so far and goes back to the scheduler
+        with redispatch priority (requeue) — under kv_snapshot resume it
+        also carries its page-list snapshot, so preemption costs one
+        re-prefill at worst and nothing at best."""
+        traj = self.slots[i]
+        if self.ro.resume_strategy == "kv_snapshot":
+            traj.kv_snapshot = self.backend.extract_snapshot(i)
+            traj.snap_cache_len = int(self.cache_len[i])
+            traj.snap_last_token = int(self.last_token[i])
+        sched.requeue(traj)
+        self.slots[i] = None
+        self.backend.free_slot(i)
+        self._stats["page_preemptions"] += 1
+
+    def _prepare_decode_pages(self, live, sched: ConcurrencyScheduler):
+        """Before each decode chunk (paged backend only): ensure every live
+        slot has pages mapped for the chunk's write range [cache_len,
+        cache_len + chunk) and owns them EXCLUSIVELY (copy-on-write detaches
+        prefix-shared pages on their first divergent write). On page
+        exhaustion, preempt the youngest live slot (fewest response tokens —
+        least redone work) until growth fits. Page copies are batched into
+        one device scatter."""
+        copies = []
+        for i in range(self.pool):
+            if not live[i]:
+                continue
+            clen = int(self.cache_len[i])
+            upto = min(clen + self._chunk, self.max_len)
+            while not self.backend.grow(i, upto, clen, copies):
+                victim = None
+                for j in range(self.pool):
+                    if live[j] and j != i and (
+                            victim is None or self.slots[j].response_len
+                            < self.slots[victim].response_len):
+                        victim = j
+                if victim is None:
+                    raise kvc.PageExhausted(
+                        f"slot {i} cannot map its decode range [{clen}, "
+                        f"{upto}) and no other live slot is preemptible — "
+                        "kv_num_pages is too small for a single trajectory")
+                self._preempt_slot(victim, sched)
+                live[victim] = False
+                # drop pending COW copies targeting pages the preemption
+                # just freed (their dst could be recycled to a new owner
+                # before the batched copy lands)
+                copies[:] = [(s, d) for s, d in copies
+                             if self.backend.refcount[d] > 0]
+        self.backend.apply_copies(copies)
+        return live
 
     # ------------------------------------------------------------------
     def collect(self, params, stage_id: int, key, *,
@@ -342,99 +531,157 @@ class RolloutEngine:
 
         ``target_concurrency``: this stage's in-flight cap (adaptive N' —
         must not exceed the slot pool; None = the static configured N')."""
+        self.begin_stage(params, stage_id, key,
+                         target_concurrency=target_concurrency)
+        try:
+            while not self._sched.done and self.step_stage(params, key):
+                pass
+        except BaseException:
+            self._collect_guard.release()
+            raise
+        return self.end_stage()
+
+    # -- incremental stage API -----------------------------------------
+    # collect() == begin_stage + step_stage-until-idle + end_stage. The
+    # split exists so external drivers (launch/serve.py's ServeEngine) can
+    # interleave their own work — admitting new requests, streaming partial
+    # tokens — between decode chunks without owning the loop.
+
+    def begin_stage(self, params, stage_id: int, key, *,
+                    target_concurrency: Optional[int] = None
+                    ) -> ConcurrencyScheduler:
+        """Open a stage: reset per-stage stats, build the scheduler, and run
+        the initial whole-pool fill. Takes the engine's single-owner guard
+        (released by :meth:`end_stage`)."""
         if not self._collect_guard.acquire(blocking=False):
             raise RuntimeError(
-                "RolloutEngine.collect re-entered: the engine owns its "
+                "RolloutEngine stage re-entered: the engine owns its "
                 "donated KV cache and must be driven from a single thread")
-        try:
-            return self._collect(params, stage_id, key,
-                                 target_concurrency=target_concurrency)
-        finally:
-            self._collect_guard.release()
-
-    def _collect(self, params, stage_id: int, key, *,
-                 target_concurrency: Optional[int] = None
-                 ) -> Tuple[List[Group], dict]:
         if target_concurrency is not None and not (
                 1 <= target_concurrency <= self.pool):
+            self._collect_guard.release()
             raise ValueError(
                 f"target_concurrency {target_concurrency} outside "
                 f"[1, pool={self.pool}] — the slot pool is sized to "
                 "concurrency_max at engine construction")
         self._stage = stage_id
         self._stats = dict(prefill_count=0, prefill_tokens=0, prefill_calls=0,
+                           prefill_rows=0, shared_prefill_rows=0,
                            decode_steps=0, decode_chunks=0, host_syncs=0,
                            active_slot_steps=0, slot_steps=0, generated=0,
-                           overgen_tokens=0, resumed=0, evicted=0)
-        t0 = time.perf_counter()
-        sched = ConcurrencyScheduler(self.ro, self.buffer, self._new_group,
-                                     target_concurrency=target_concurrency)
+                           overgen_tokens=0, resumed=0, evicted=0,
+                           admission_blocked=0, page_preemptions=0)
+        self._reserved_pages = 0
+        self._reservations.clear()
+        self._t0 = time.perf_counter()
+        self._sched = ConcurrencyScheduler(
+            self.ro, self.buffer, self._new_group,
+            target_concurrency=target_concurrency)
         if self.ro.mode == "sync":
             assert len(self.buffer) == 0, "sync mode must start with empty buffer"
 
         # initial fill: one batched prefill over the whole pool
         self._prefill_rounds(
-            self._dispatch_refills(range(self.pool), sched), sched,
-            params, key)
+            self._dispatch_refills(range(self.pool), self._sched),
+            self._sched, params, key)
+        return self._sched
 
-        D = self._chunk
-        while not sched.done:
-            live = np.array([t is not None for t in self.slots], bool)
+    def step_stage(self, params, key, *,
+                   admit_idle: Optional[bool] = None) -> bool:
+        """Run ONE decode chunk (+ its host replay and refill prefills).
+        Returns False when the engine is idle — nothing live in the pool —
+        so a bare ``while step_stage(...)`` loop terminates. ``admit_idle``
+        re-offers idle slots to the scheduler before decoding (default: on
+        for the paged backend, whose admission gate / preemption can idle
+        slots mid-stage; serving drivers pass True so requests submitted
+        between steps are admitted immediately)."""
+        sched = self._sched
+        stage_id = self._stage
+        admit = self.backend.is_paged if admit_idle is None else admit_idle
+        if admit and not sched.done:
+            # continuous batching: slots idled by an admission block, a page
+            # preemption, or an empty request queue are re-offered every
+            # chunk boundary — finishes may have freed pages / new work
+            idle = [i for i in range(self.pool) if self.slots[i] is None]
+            if idle:
+                self._prefill_rounds(
+                    self._dispatch_refills(idle, sched), sched, params, key)
+        live = np.array([t is not None for t in self.slots], bool)
+        if not live.any():
+            return False               # nothing in flight and scheduler idle
+        if self.backend.is_paged:
+            live = self._prepare_decode_pages(live, sched)
             if not live.any():
-                break                  # nothing in flight and scheduler idle
-            resp_len = np.array([0 if t is None else t.response_len
-                                 for t in self.slots], np.int32)
-            self.cache, ys = self._decode_chunk_fn(
-                params, self.cache, jnp.asarray(self.last_token),
-                jnp.asarray(self.cache_len), jnp.asarray(live),
-                jnp.asarray(resp_len), jnp.asarray(self.slot_gid),
-                jnp.asarray(self.slot_sidx), key)
-            toks, logps, was_active = jax.device_get(ys)   # ONE transfer
-            self._stats["decode_chunks"] += 1
-            self._stats["host_syncs"] += 1
-            self._stats["decode_steps"] += D
-            self._stats["slot_steps"] += D * self.pool
+                return True            # all preempted; retry next step
+        D = self._chunk
+        resp_len = np.array([0 if t is None else t.response_len
+                             for t in self.slots], np.int32)
+        self.cache, ys = self._decode_chunk_fn(
+            params, self.cache, jnp.asarray(self.last_token),
+            jnp.asarray(self.cache_len), jnp.asarray(live),
+            jnp.asarray(resp_len), jnp.asarray(self.slot_gid),
+            jnp.asarray(self.slot_sidx), key,
+            self.backend.block_table_device())
+        toks, logps, was_active = jax.device_get(ys)   # ONE transfer
+        self._stats["decode_chunks"] += 1
+        self._stats["host_syncs"] += 1
+        self._stats["decode_steps"] += D
+        self._stats["slot_steps"] += D * self.pool
 
-            # host replay of the chunk, in (step, slot) order
-            pending = []
-            for d in range(D):
-                if sched.done or not live.any():
-                    self._stats["overgen_tokens"] += int(was_active[d:].sum())
-                    break
-                assert np.array_equal(was_active[d], live), \
-                    "device/host stop detection desynchronised"
-                step_live = np.nonzero(live)[0]
-                self._stats["active_slot_steps"] += len(step_live)
-                freed = []
-                for i in step_live:
-                    i = int(i)
-                    traj = self.slots[i]
-                    self.cache_len[i] += 1
-                    tok = int(toks[d, i])
-                    traj.append(tok, float(logps[d, i]), stage_id)
-                    self.last_token[i] = tok
-                    self._stats["generated"] += 1
-                    reason = self._maybe_done(traj)
-                    if reason:
-                        self._finish(traj, reason, sched)
-                        self.slots[i] = None
-                        live[i] = False
-                        freed.append(i)
-                if freed:
-                    sched.harvest()
-                    pending.extend(self._dispatch_refills(freed, sched))
-            self._prefill_rounds(pending, sched, params, key)
+        # host replay of the chunk, in (step, slot) order
+        pending = []
+        for d in range(D):
+            if sched.done or not live.any():
+                self._stats["overgen_tokens"] += int(was_active[d:].sum())
+                break
+            assert np.array_equal(was_active[d], live), \
+                "device/host stop detection desynchronised"
+            step_live = np.nonzero(live)[0]
+            self._stats["active_slot_steps"] += len(step_live)
+            freed = []
+            for i in step_live:
+                i = int(i)
+                traj = self.slots[i]
+                self.cache_len[i] += 1
+                tok = int(toks[d, i])
+                traj.append(tok, float(logps[d, i]), stage_id)
+                self.last_token[i] = tok
+                self._stats["generated"] += 1
+                reason = self._maybe_done(traj)
+                if reason:
+                    self._finish(traj, reason, sched)
+                    self.slots[i] = None
+                    self.backend.free_slot(i)
+                    live[i] = False
+                    freed.append(i)
+            if freed:
+                sched.harvest()
+                pending.extend(self._dispatch_refills(freed, sched))
+        self._prefill_rounds(pending, sched, params, key)
+        return True
 
+    def end_stage(self) -> Tuple[List[Group], dict]:
+        """Close the stage: evict in-flight work to the buffer, finalize
+        stats, release the single-owner guard."""
+        try:
+            return self._end_stage()
+        finally:
+            self._collect_guard.release()
+
+    def _end_stage(self) -> Tuple[List[Group], dict]:
+        sched = self._sched
+        stage_id = self._stage
+        t0 = self._t0
         # early termination: evict in-flight work back to the buffer
         for i, traj in enumerate(self.slots):
             if traj is not None:
                 if self.ro.resume_strategy == "kv_snapshot":
-                    traj.kv_snapshot = kvc.extract_slots(
-                        self.cache, jnp.asarray([i]))
+                    traj.kv_snapshot = self.backend.extract_snapshot(i)
                     traj.snap_cache_len = int(self.cache_len[i])
                     traj.snap_last_token = int(self.last_token[i])
                 sched.release(traj)
                 self.slots[i] = None
+                self.backend.free_slot(i)
                 self._stats["evicted"] += 1
         sched.harvest()
 

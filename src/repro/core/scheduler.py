@@ -37,15 +37,19 @@ class ConcurrencyScheduler:
         self.target_concurrency = (cfg.concurrency
                                    if target_concurrency is None
                                    else target_concurrency)
+        # stage completion target; an attribute (not read from cfg) so an
+        # incremental driver (launch/serve.py) can raise it as new requests
+        # are submitted mid-stage
+        self.target_batch = cfg.batch_size
         self.completed: List[Group] = []
         self.dispatched = 0            # requests handed out this stage
         self.in_flight: set = set()    # traj_ids currently occupying slots
+        # requests handed back by the engine because a RESOURCE gate (free
+        # KV pages) blocked admission — redispatched with top priority, so
+        # resource pressure never reorders the scheduling policy
+        self._requeued: List[Trajectory] = []
 
     # ------------------------------------------------------------------
-    @property
-    def target_batch(self) -> int:
-        return self.cfg.batch_size
-
     @property
     def done(self) -> bool:
         if self.cfg.mode == "sync":
@@ -62,14 +66,23 @@ class ConcurrencyScheduler:
         """What should fill a freed slot? None -> leave the slot idle."""
         mode = self.cfg.mode
         t = None
+        if self._requeued:
+            # admission-blocked work was already approved by the policy
+            # below — hand it out first (its group is committed; delaying it
+            # behind new spawns would mint extra guaranteed-evicted work)
+            t = self._requeued.pop(0)
+            self.dispatched += 1
+            self.in_flight.add(t.traj_id)
+            return t
         if mode == "sync":
             # fixed workload: spawn until B groups x G samples exist, no reuse
             t = self.buffer.pop_unspawned()
             if t is None and (self.buffer.num_groups + len(self.completed)
                               < self.target_batch):
                 g = self.new_group()
-                self.buffer.add_group(g)
-                t = g.spawn()
+                if g is not None:      # prompt source may decline (no work)
+                    self.buffer.add_group(g)
+                    t = g.spawn()
         elif mode == "naive_partial":
             # one-shot submission up to initial concurrency, then no refill
             if self.dispatched < self.cfg.concurrency:
@@ -101,6 +114,17 @@ class ConcurrencyScheduler:
         """Slot freed (trajectory finished or evicted at stage end)."""
         self.in_flight.discard(traj.traj_id)
 
+    def requeue(self, traj: Trajectory):
+        """Undo a dispatch the engine could not admit (e.g. the paged KV
+        backend ran out of free pages). The trajectory stays in its buffered
+        group — a fresh spawn keeps its sample_idx — and is redispatched
+        with priority by the next :meth:`next_request`. Unconsumed requeues
+        survive in the buffer across stages (their groups are incomplete),
+        so blocked work is never lost."""
+        self.in_flight.discard(traj.traj_id)
+        self.dispatched -= 1
+        self._requeued.append(traj)
+
     def _copris_pick(self) -> Optional[Trajectory]:
         t = self.buffer.pop_resumable(exclude=self.in_flight)  # prioritized resumption
         if t is None:
@@ -117,6 +141,8 @@ class ConcurrencyScheduler:
             if self.done:
                 return None
             g = self.new_group()
+            if g is None:              # prompt source declined (no work)
+                return None
             self.buffer.add_group(g)
             t = g.spawn()
         return t

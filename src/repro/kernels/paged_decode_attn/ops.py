@@ -1,0 +1,28 @@
+"""Jit'd wrapper for the paged decode attention kernel (model pool layout)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.paged_decode_attn.paged_decode_attn import (
+    paged_decode_attention_kernel,
+)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "page_size", "window", "attn_softcap", "scale", "interpret"))
+def paged_decode_attention(q, k_pool, v_pool, block_table, page_size,
+                           cache_len, *, window=0, attn_softcap=0.0,
+                           scale=0.0, interpret=None):
+    """Model layout: q (B, 1, H, hd); pools (NP, ps, KV, hd) as stored by
+    ``init_paged_cache``; block_table (B, max_pages) int32 (sentinel NP);
+    cache_len (B,). Returns (B, 1, H, hd) — drop-in for
+    ``kernels.paged_decode_attn.ref.paged_decode_attention``."""
+    del page_size  # implied by the pool's page axis; kept for ref parity
+    interp = (jax.default_backend() == "cpu") if interpret is None else interpret
+    out = paged_decode_attention_kernel(
+        q[:, 0], k_pool.transpose(0, 2, 1, 3), v_pool.transpose(0, 2, 1, 3),
+        block_table, cache_len, window=window, attn_softcap=attn_softcap,
+        scale=scale, interpret=interp)
+    return out[:, None]

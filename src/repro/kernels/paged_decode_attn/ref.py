@@ -1,0 +1,23 @@
+"""Oracle: pure-jnp paged decode attention (gather pages, then dense).
+
+The reference semantics are exactly what the model's paged decode path
+computes: flat-gather the block-table pages into a dense (B, L, KV, hd)
+view (sentinel/unmapped pages read as zeros, masked out by ``cache_len``),
+then run the dense decode attention reduction. The Pallas kernel must be
+bit-compatible with this up to float tolerance.
+"""
+from __future__ import annotations
+
+from repro.models.attention import decode_attention, paged_gather_kv
+
+
+def paged_decode_attention(q, k_pool, v_pool, block_table, page_size,
+                           cache_len, *, window=0, attn_softcap=0.0,
+                           scale=0.0):
+    """q: (B, 1, H, hd); k/v_pool: (NP, ps, KV, hd) physical page pools;
+    block_table: (B, max_pages) int32, sentinel == NP for unmapped pages;
+    cache_len: (B,). Returns (B, 1, H, hd)."""
+    k = paged_gather_kv(k_pool, block_table, page_size)
+    v = paged_gather_kv(v_pool, block_table, page_size)
+    return decode_attention(q, k, v, cache_len, window=window,
+                            attn_softcap=attn_softcap, scale=scale)

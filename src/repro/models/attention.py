@@ -304,6 +304,44 @@ def decode_attention(q, k_cache, v_cache, cache_len, *,
 
 
 # ---------------------------------------------------------------------------
+# paged KV decode (block-table indirection; reference = gather-to-dense)
+# ---------------------------------------------------------------------------
+
+
+def paged_write_kv(pool, new, block_table, page_size: int, cache_len):
+    """Write one decode token's K (or V) into a paged pool.
+
+    pool: (NP, ps, KV, hd) physical pages; new: (B, 1, KV, hd);
+    block_table: (B, max_pages) int32 with sentinel NP for unmapped pages;
+    cache_len: (B,) logical write position. Sentinel pages flat-index out of
+    bounds and the scatter DROPS them — dead/padding slots write nowhere, so
+    their recycled pages can already belong to a new trajectory."""
+    NP, ps = pool.shape[0], pool.shape[1]
+    B = new.shape[0]
+    pg = block_table[jnp.arange(B), cache_len // page_size]
+    flat = pg.astype(jnp.int32) * ps + (cache_len % page_size).astype(jnp.int32)
+    flatpool = pool.reshape(NP * ps, *pool.shape[2:])
+    flatpool = flatpool.at[flat].set(new[:, 0].astype(pool.dtype), mode="drop")
+    return flatpool.reshape(pool.shape)
+
+
+def paged_gather_kv(pool, block_table, page_size: int):
+    """Gather a paged pool back to the dense per-slot layout
+    (B, max_pages * ps, KV, hd). Unmapped (sentinel) pages read as zeros;
+    every such position is beyond cache_len and therefore masked to NEG_INF
+    by :func:`decode_attention`, so the paged decode is *bit-identical* to
+    dense decode (same reduction shape, same masked operands). This is the
+    reference semantics for the ``paged_decode_attn`` Pallas kernel, which
+    streams only the mapped pages instead of materialising this view."""
+    NP, ps = pool.shape[0], pool.shape[1]
+    pos = jnp.arange(block_table.shape[1] * ps)
+    flat = (block_table[:, pos // page_size].astype(jnp.int32) * ps
+            + (pos % page_size).astype(jnp.int32))                # (B, L)
+    flatpool = pool.reshape(NP * ps, *pool.shape[2:])
+    return jnp.take(flatpool, flat, axis=0, mode="fill", fill_value=0)
+
+
+# ---------------------------------------------------------------------------
 # full attention sub-block (proj + rope + attend + out-proj)
 # ---------------------------------------------------------------------------
 
@@ -313,7 +351,8 @@ def _split_heads(x, n, hd):
 
 
 def attention_block(params, cfg, x, positions, *, kind: str,
-                    kv_cache=None, cache_len=None, use_pallas: bool = False):
+                    kv_cache=None, cache_len=None, use_pallas: bool = False,
+                    paged=None):
     """Self-attention sub-block.
 
     Training/prefill: kv_cache is None -> returns (out, (k, v)) where k/v are
@@ -321,6 +360,8 @@ def attention_block(params, cfg, x, positions, *, kind: str,
     Decode: kv_cache=(k_cache, v_cache) pre-allocated (B, L, KV, hd),
     cache_len (B,) = tokens already in cache; x is (B, 1, d). Returns
     (out, (k_cache', v_cache')) with the new token written at cache_len.
+    Paged decode: ``paged=(block_table (B, max_pages) int32, page_size)`` and
+    kv_cache holds physical page pools (NP, ps, KV, hd) shared by all slots.
     """
     d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     dt = x.dtype
@@ -346,6 +387,15 @@ def attention_block(params, cfg, x, positions, *, kind: str,
             out = chunked_attention(q, k, v, causal=True, window=window,
                                     attn_softcap=cap, q_offset=0)
         new_kv = (k, v)
+    elif paged is not None:
+        k_cache, v_cache = kv_cache
+        bt, psz = paged
+        k_cache = paged_write_kv(k_cache, k, bt, psz, cache_len)
+        v_cache = paged_write_kv(v_cache, v, bt, psz, cache_len)
+        out = decode_attention(q, paged_gather_kv(k_cache, bt, psz),
+                               paged_gather_kv(v_cache, bt, psz),
+                               cache_len + 1, window=window, attn_softcap=cap)
+        new_kv = (k_cache, v_cache)
     else:
         k_cache, v_cache = kv_cache
         B = x.shape[0]

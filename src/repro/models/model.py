@@ -45,6 +45,18 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
     return transformer.init_stack_cache(cfg, batch, max_len, dtype)
 
 
+def init_paged_cache(cfg: ModelConfig, batch: int, max_len: int, *,
+                     page_size: int, num_pages: int, dtype=None):
+    """Paged-KV slot cache: attention K/V leaves become physical page pools
+    (num_pages, page_size, kv, hd) shared by all ``batch`` slots (layer-
+    stacked body leaves carry a leading repeats axis); non-attention state
+    keeps its per-slot batch axis. Decode with ``decode_step(...,
+    paged=(block_table, page_size))``."""
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    return transformer.init_stack_cache(cfg, batch, max_len, dtype,
+                                        kv_pages=(num_pages, page_size))
+
+
 # ---------------------------------------------------------------------------
 
 
@@ -85,7 +97,7 @@ def _logits(params, cfg: ModelConfig, x):
 
 def backbone(params, cfg: ModelConfig, tokens, *, positions=None, media=None,
              cache=None, cache_len=None, seq_mask=None, lengths=None,
-             mode="train", use_pallas=False, remat=False):
+             mode="train", use_pallas=False, remat=False, paged=None):
     """Embed + stack + final norm. Returns (hidden (B,S,d), new_cache, aux)."""
     B, S = tokens.shape
     if positions is None:
@@ -101,7 +113,7 @@ def backbone(params, cfg: ModelConfig, tokens, *, positions=None, media=None,
     x, new_cache, aux = transformer.apply_stack(
         params["stack"], cfg, x, positions=positions, media=media_p,
         cache=cache, cache_len=cache_len, seq_mask=seq_mask, lengths=lengths,
-        mode=mode, use_pallas=use_pallas, remat=remat)
+        mode=mode, use_pallas=use_pallas, remat=remat, paged=paged)
     x = rms_norm(x, params["final_norm"], eps=cfg.rms_eps)
     return x, new_cache, aux
 
@@ -172,19 +184,22 @@ def prefill(params, cfg: ModelConfig, tokens, lengths, cache, *, media=None,
 
 
 def decode_step(params, cfg: ModelConfig, token, cache, cache_len, *,
-                media=None, use_pallas=False):
+                media=None, use_pallas=False, paged=None):
     """token: (B,) int32 — the *input* token; returns logits (B, V) for the
-    next token plus the updated cache (token's K/V written at cache_len)."""
+    next token plus the updated cache (token's K/V written at cache_len).
+    ``paged=(block_table (B, max_pages), page_size)`` decodes against a
+    :func:`init_paged_cache` cache."""
     x, new_cache, _ = backbone(params, cfg, token[:, None], cache=cache,
                                cache_len=cache_len, media=media,
-                               mode="decode", use_pallas=use_pallas)
+                               mode="decode", use_pallas=use_pallas,
+                               paged=paged)
     logits = _logits(params, cfg, x)[:, 0]
     return logits, new_cache
 
 
 def decode_scan(params, cfg: ModelConfig, cache, last_token, cache_len,
                 active, aux, *, steps: int, step_fn, media=None,
-                use_pallas=False):
+                use_pallas=False, paged=None):
     """Run ``steps`` fused decode+sample iterations entirely on device.
 
     One ``jax.lax.scan`` over :func:`decode_step`; the caller supplies the
@@ -207,7 +222,8 @@ def decode_scan(params, cfg: ModelConfig, cache, last_token, cache_len,
     def body(carry, _):
         cache, last_tok, clen, act, a = carry
         logits, cache = decode_step(params, cfg, last_tok, cache, clen,
-                                    media=media, use_pallas=use_pallas)
+                                    media=media, use_pallas=use_pallas,
+                                    paged=paged)
         tok, logp, stop, a = step_fn(logits, clen, act, a)
         clen = clen + act.astype(clen.dtype)
         last_tok = jnp.where(act, tok.astype(last_tok.dtype), last_tok)

@@ -65,13 +65,22 @@ def init_block(key, cfg: ModelConfig, kind: str, dtype):
 # ---------------------------------------------------------------------------
 
 
-def init_block_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int, dtype):
+def init_block_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int,
+                     dtype, *, kv_pages=None):
+    """``kv_pages=(num_pages, page_size)`` switches the attention K/V leaves
+    (dict keys "k"/"v") to a physical page pool (num_pages, page_size, kv,
+    hd) shared by all slots; every other leaf keeps its per-slot batch axis
+    (no length axis to page)."""
     kv, hd = cfg.num_kv_heads, cfg.head_dim
+    if kv_pages is not None:
+        kv_shape = kv_pages
+    else:
+        kv_shape = (batch, max_len)
     if kind in ("attn", "local", "global", "moe"):
         # sliding-window layers only ever read the last `window` entries but
         # we keep the full ring for simplicity of absolute indexing.
-        return {"k": jnp.zeros((batch, max_len, kv, hd), dtype),
-                "v": jnp.zeros((batch, max_len, kv, hd), dtype)}
+        return {"k": jnp.zeros((*kv_shape, kv, hd), dtype),
+                "v": jnp.zeros((*kv_shape, kv, hd), dtype)}
     if kind == "xattn":
         # media K/V are static per request: computed at prefill, reused at
         # every decode step (hillclimb C)
@@ -83,8 +92,8 @@ def init_block_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int, dtyp
     if kind == "hymba":
         di = ssm_mod.d_inner_of(cfg)
         K = cfg.ssm.conv_dim
-        return {"k": jnp.zeros((batch, max_len, kv, hd), dtype),
-                "v": jnp.zeros((batch, max_len, kv, hd), dtype),
+        return {"k": jnp.zeros((*kv_shape, kv, hd), dtype),
+                "v": jnp.zeros((*kv_shape, kv, hd), dtype),
                 "ssm": jnp.zeros((batch, di, cfg.ssm.state_dim), jnp.float32),
                 "conv": jnp.zeros((batch, K - 1, di), dtype)}
     raise ValueError(kind)
@@ -103,12 +112,14 @@ def _gather_last(x, lengths):
 
 def apply_block(params, cfg: ModelConfig, kind: str, x, *, positions,
                 media=None, cache=None, cache_len=None, seq_mask=None,
-                lengths=None, mode: str = "train", use_pallas: bool = False):
+                lengths=None, mode: str = "train", use_pallas: bool = False,
+                paged=None):
     """Returns (x_out, new_cache, aux).
 
     mode: "train" (no cache), "prefill" (seed cache; all rows padded to the
     same S, right-padded, per-row true ``lengths``), "decode" (x is (B,1,d),
-    ``cache_len`` (B,) tokens already in cache).
+    ``cache_len`` (B,) tokens already in cache). ``paged=(block_table,
+    page_size)`` selects the paged-KV decode path (decode mode only).
     """
     aux = jnp.zeros((), jnp.float32)
     new_cache = cache
@@ -119,7 +130,7 @@ def apply_block(params, cfg: ModelConfig, kind: str, x, *, positions,
             a, (kc, vc) = attn_mod.attention_block(
                 params["attn"], cfg, h, positions, kind=kind,
                 kv_cache=(cache["k"], cache["v"]), cache_len=cache_len,
-                use_pallas=use_pallas)
+                use_pallas=use_pallas, paged=paged)
             new_cache = dict(cache, k=kc, v=vc)
         else:
             a, (k, v) = attn_mod.attention_block(
@@ -205,7 +216,7 @@ def apply_block(params, cfg: ModelConfig, kind: str, x, *, positions,
             a, (kc, vc) = attn_mod.attention_block(
                 params["attn"], cfg, h, positions, kind="local",
                 kv_cache=(cache["k"], cache["v"]), cache_len=cache_len,
-                use_pallas=use_pallas)
+                use_pallas=use_pallas, paged=paged)
             s, ssm_st, conv_st = ssm_mod.apply_ssm(
                 params["ssm"], cfg, h, cache["ssm"], cache["conv"],
                 use_pallas=use_pallas)
@@ -258,10 +269,13 @@ def init_stack(key, cfg: ModelConfig, dtype):
     return {"prefix": prefix, "body": body}
 
 
-def init_stack_cache(cfg: ModelConfig, batch: int, max_len: int, dtype):
-    prefix = [init_block_cache(cfg, kind, batch, max_len, dtype)
+def init_stack_cache(cfg: ModelConfig, batch: int, max_len: int, dtype, *,
+                     kv_pages=None):
+    prefix = [init_block_cache(cfg, kind, batch, max_len, dtype,
+                               kv_pages=kv_pages)
               for kind in cfg.prefix_pattern]
-    one = tuple(init_block_cache(cfg, kind, batch, max_len, dtype)
+    one = tuple(init_block_cache(cfg, kind, batch, max_len, dtype,
+                                 kv_pages=kv_pages)
                 for kind in cfg.block_pattern)
     R = cfg.num_repeats
     body = jax.tree.map(lambda a: jnp.broadcast_to(a, (R,) + a.shape).copy(), one)
@@ -271,7 +285,7 @@ def init_stack_cache(cfg: ModelConfig, batch: int, max_len: int, dtype):
 def apply_stack(params, cfg: ModelConfig, x, *, positions, media=None,
                 cache=None, cache_len=None, seq_mask=None, lengths=None,
                 mode: str = "train", use_pallas: bool = False,
-                remat: bool = False):
+                remat: bool = False, paged=None):
     """Run all layers. Returns (x, new_cache, aux_sum)."""
     aux_total = jnp.zeros((), jnp.float32)
     new_prefix = []
@@ -281,7 +295,7 @@ def apply_stack(params, cfg: ModelConfig, x, *, positions, media=None,
                                  positions=positions, media=media, cache=c,
                                  cache_len=cache_len, seq_mask=seq_mask,
                                  lengths=lengths, mode=mode,
-                                 use_pallas=use_pallas)
+                                 use_pallas=use_pallas, paged=paged)
         new_prefix.append(nc)
         aux_total = aux_total + aux
 
@@ -291,11 +305,14 @@ def apply_stack(params, cfg: ModelConfig, x, *, positions, media=None,
         new_c = []
         for j, kind in enumerate(cfg.block_pattern):
             c = c_rep[j] if c_rep is not None else None
+            # ``paged`` (the block table) is a loop-invariant of the layer
+            # scan: per-layer page pools are scanned, the table is shared
             x, nc, aux = apply_block(p_rep[j], cfg, kind, x,
                                      positions=positions, media=media,
                                      cache=c, cache_len=cache_len,
                                      seq_mask=seq_mask, lengths=lengths,
-                                     mode=mode, use_pallas=use_pallas)
+                                     mode=mode, use_pallas=use_pallas,
+                                     paged=paged)
             new_c.append(nc)
             aux_sum = aux_sum + aux
         if mode == "train":

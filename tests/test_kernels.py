@@ -16,6 +16,8 @@ from repro.kernels.flash_attn import ops as fa_ops
 from repro.kernels.flash_attn import ref as fa_ref
 from repro.kernels.fused_logprob import ops as flp_ops
 from repro.kernels.fused_logprob import ref as flp_ref
+from repro.kernels.paged_decode_attn import ops as pda_ops
+from repro.kernels.paged_decode_attn import ref as pda_ref
 from repro.kernels.rwkv6_scan import ops as wkv_ops
 from repro.kernels.rwkv6_scan import ref as wkv_ref
 from repro.kernels.ssm_scan import ops as ssm_ops
@@ -105,6 +107,82 @@ def test_decode_attention_hypothesis(B, L, hd, win):
     cl = (jnp.arange(B) * 13) % (L - 2) + 2
     ref = da_ref.decode_attention(q, kc, vc, cl, window=win)
     out = da_ops.decode_attention(q, kc, vc, cl, window=win, block_l=32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# paged decode attention
+# ---------------------------------------------------------------------------
+
+def _random_block_tables(B, NP, max_pages, ps, cache_len, seed):
+    """Block tables with scattered physical pages and sentinel (NP) tails."""
+    rng = np.random.default_rng(seed)
+    bt = np.full((B, max_pages), NP, np.int32)
+    for b in range(B):
+        npg = -(-int(cache_len[b]) // ps)
+        bt[b, :npg] = rng.choice(NP, npg, replace=False)
+    return jnp.asarray(bt)
+
+
+PDA_CASES = [
+    # B, NP, max_pages, ps, H, KV, hd, win, cap, dtype
+    (2, 12, 4, 16, 4, 2, 64, 0, 0.0, jnp.float32),
+    (3, 20, 6, 8, 8, 8, 32, 0, 30.0, jnp.float32),
+    (2, 16, 8, 16, 4, 1, 64, 48, 0.0, jnp.float32),
+    (1, 9, 3, 32, 5, 5, 64, 0, 0.0, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("case", PDA_CASES)
+def test_paged_decode_attention(case):
+    B, NP, mp, ps, H, KV, hd, win, cap, dt = case
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, 1, H, hd), dt)
+    kp = jax.random.normal(ks[1], (NP, ps, KV, hd), dt)
+    vp = jax.random.normal(ks[2], (NP, ps, KV, hd), dt)
+    cl = (jnp.arange(B) * 29) % (mp * ps - 2) + 2
+    bt = _random_block_tables(B, NP, mp, ps, cl, seed=B + NP)
+    ref = pda_ref.paged_decode_attention(q, kp, vp, bt, ps, cl, window=win,
+                                         attn_softcap=cap)
+    out = pda_ops.paged_decode_attention(q, kp, vp, bt, ps, cl, window=win,
+                                         attn_softcap=cap)
+    atol = 3e-5 if dt == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=atol)
+
+
+def test_paged_matches_dense_decode_attention():
+    """A contiguous identity block table reduces paged attention to the
+    dense kernel's semantics on the same cache bytes."""
+    B, mp, ps, H, KV, hd = 2, 4, 16, 4, 2, 64
+    L = mp * ps
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, 1, H, hd))
+    kc = jax.random.normal(ks[1], (B, L, KV, hd))
+    vc = jax.random.normal(ks[2], (B, L, KV, hd))
+    cl = jnp.array([L - 3, 7])
+    # pool = the two caches stacked page-wise; identity-ish block tables
+    kp = kc.reshape(B * mp, ps, KV, hd)
+    vp = vc.reshape(B * mp, ps, KV, hd)
+    bt = jnp.arange(B * mp, dtype=jnp.int32).reshape(B, mp)
+    ref = da_ref.decode_attention(q, kc, vc, cl)
+    out = pda_ops.paged_decode_attention(q, kp, vp, bt, ps, cl)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5)
+
+
+@given(B=st.integers(1, 3), mp=st.integers(1, 5),
+       ps=st.sampled_from([8, 16]), extra=st.integers(0, 6))
+@settings(max_examples=15, deadline=None)
+def test_paged_decode_attention_hypothesis(B, mp, ps, extra):
+    NP = B * mp + extra
+    ks = jax.random.split(jax.random.PRNGKey(B * 100 + mp * 10 + ps), 3)
+    q = jax.random.normal(ks[0], (B, 1, 4, 32))
+    kp = jax.random.normal(ks[1], (NP, ps, 2, 32))
+    vp = jax.random.normal(ks[2], (NP, ps, 2, 32))
+    cl = (jnp.arange(B) * 13) % (mp * ps - 1) + 1
+    bt = _random_block_tables(B, NP, mp, ps, cl, seed=extra)
+    ref = pda_ref.paged_decode_attention(q, kp, vp, bt, ps, cl)
+    out = pda_ops.paged_decode_attention(q, kp, vp, bt, ps, cl)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5)
 
 
