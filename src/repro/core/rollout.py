@@ -464,14 +464,24 @@ class RolloutEngine:
                 sched.harvest()
                 pending = self._dispatch_refills(freed, sched)
 
-    def _preempt_slot(self, i: int, sched: ConcurrencyScheduler):
+    def _preempt_slot(self, i: int, sched: ConcurrencyScheduler,
+                      copies: Optional[List[Tuple[int, int]]] = None):
         """Evict a live slot mid-stage to free its pages. The trajectory
         keeps everything generated so far and goes back to the scheduler
         with redispatch priority (requeue) — under kv_snapshot resume it
         also carries its page-list snapshot, so preemption costs one
-        re-prefill at worst and nothing at best."""
+        re-prefill at worst and nothing at best.
+
+        ``copies`` is the current round's pending COW batch: if the victim
+        COW'd earlier in this round, its block table already points at copy
+        DESTINATION pages whose scatter has not landed yet, so the batch
+        must be flushed before a snapshot is extracted (sources are still
+        intact — no decode write happens until after the round)."""
         traj = self.slots[i]
         if self.ro.resume_strategy == "kv_snapshot":
+            if copies:
+                self.backend.apply_copies(copies)
+                copies.clear()
             traj.kv_snapshot = self.backend.extract_snapshot(i)
             traj.snap_cache_len = int(self.cache_len[i])
             traj.snap_last_token = int(self.last_token[i])
@@ -506,11 +516,12 @@ class RolloutEngine:
                         f"slot {i} cannot map its decode range [{clen}, "
                         f"{upto}) and no other live slot is preemptible — "
                         "kv_num_pages is too small for a single trajectory")
-                self._preempt_slot(victim, sched)
+                self._preempt_slot(victim, sched, copies)
                 live[victim] = False
                 # drop pending COW copies targeting pages the preemption
                 # just freed (their dst could be recycled to a new owner
-                # before the batched copy lands)
+                # before the batched copy lands); under kv_snapshot the
+                # batch was already flushed and cleared before snapshotting
                 copies[:] = [(s, d) for s, d in copies
                              if self.backend.refcount[d] > 0]
         self.backend.apply_copies(copies)

@@ -315,11 +315,18 @@ def paged_write_kv(pool, new, block_table, page_size: int, cache_len):
     block_table: (B, max_pages) int32 with sentinel NP for unmapped pages;
     cache_len: (B,) logical write position. Sentinel pages flat-index out of
     bounds and the scatter DROPS them — dead/padding slots write nowhere, so
-    their recycled pages can already belong to a new trajectory."""
+    their recycled pages can already belong to a new trajectory. A write at
+    cache_len >= max_pages*ps (slot already full) is likewise forced onto
+    the sentinel so it drops instead of clamping into the slot's LAST
+    physical page and corrupting position (max_pages-1)*ps."""
     NP, ps = pool.shape[0], pool.shape[1]
     B = new.shape[0]
-    pg = block_table[jnp.arange(B), cache_len // page_size]
-    flat = pg.astype(jnp.int32) * ps + (cache_len % page_size).astype(jnp.int32)
+    max_pages = block_table.shape[1]
+    pos = cache_len.astype(jnp.int32)
+    pg = block_table[jnp.arange(B), jnp.minimum(pos // page_size,
+                                                max_pages - 1)]
+    pg = jnp.where(pos < max_pages * page_size, pg, NP)
+    flat = pg.astype(jnp.int32) * ps + pos % page_size
     flatpool = pool.reshape(NP * ps, *pool.shape[2:])
     flatpool = flatpool.at[flat].set(new[:, 0].astype(pool.dtype), mode="drop")
     return flatpool.reshape(pool.shape)
@@ -392,9 +399,19 @@ def attention_block(params, cfg, x, positions, *, kind: str,
         bt, psz = paged
         k_cache = paged_write_kv(k_cache, k, bt, psz, cache_len)
         v_cache = paged_write_kv(v_cache, v, bt, psz, cache_len)
-        out = decode_attention(q, paged_gather_kv(k_cache, bt, psz),
-                               paged_gather_kv(v_cache, bt, psz),
-                               cache_len + 1, window=window, attn_softcap=cap)
+        if use_pallas:
+            # Pallas kernel streams only the mapped pages (bytes scale with
+            # sum(cache_len)); the gather-to-dense reference below is the
+            # interpret/CPU fallback and the bit-identity oracle.
+            from repro.kernels.paged_decode_attn import ops as pda_ops
+            out = pda_ops.paged_decode_attention(
+                q, k_cache, v_cache, bt, psz, cache_len + 1,
+                window=window, attn_softcap=cap)
+        else:
+            out = decode_attention(q, paged_gather_kv(k_cache, bt, psz),
+                                   paged_gather_kv(v_cache, bt, psz),
+                                   cache_len + 1, window=window,
+                                   attn_softcap=cap)
         new_kv = (k_cache, v_cache)
     else:
         k_cache, v_cache = kv_cache

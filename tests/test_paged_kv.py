@@ -12,6 +12,7 @@ import pytest
 from repro.common.config import RolloutConfig
 from repro.configs import get_config
 from repro.core.rollout import RolloutEngine
+from repro.core.trajectory import Trajectory
 from repro.data.tasks import AdditionTask, EOS
 from repro.models import model as M
 from repro.sampling import kv_cache as kvc
@@ -172,6 +173,52 @@ def test_paged_matches_dense_model_decode():
         cl = cl + 1
 
 
+def test_paged_write_full_slot_drops():
+    """A write at cache_len == max_pages*page_size (slot fully written) must
+    DROP instead of clamping into the slot's last physical page and
+    corrupting logical position (max_pages-1)*page_size."""
+    from repro.models.attention import paged_write_kv
+    NP, ps, mp, KV, hd = 5, 8, 2, 2, 4
+    pool = jnp.zeros((NP, ps, KV, hd))
+    bt = jnp.array([[0, 1]], jnp.int32)            # fully mapped slot
+    new = jnp.ones((1, 1, KV, hd))
+    out = paged_write_kv(pool, new, bt, ps, jnp.array([mp * ps]))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(pool))
+    # an in-range write still lands (page 1, offset 0)
+    out = paged_write_kv(pool, new, bt, ps, jnp.array([ps]))
+    np.testing.assert_array_equal(np.asarray(out[1, 0]),
+                                  np.ones((KV, hd), np.float32))
+
+
+def test_paged_decode_pallas_wiring():
+    """use_pallas=True routes the paged decode through the Pallas
+    ``paged_decode_attn`` kernel (interpret mode on CPU) — the logits must
+    match the gather-to-dense reference path."""
+    B, P, MAXLEN, PS = 2, 8, 32, 8
+    toks = jax.random.randint(jax.random.PRNGKey(5), (B, P), 0,
+                              CFG.vocab_size)
+    lengths = jnp.array([P, P - 3])
+    b = _backend(pool=B, max_len=MAXLEN, ps=PS)
+    scratch = M.init_cache(CFG, B, P)
+    _, scratch = M.prefill(PARAMS, CFG, toks, lengths, scratch)
+    flat_pos = np.full((B, P), b.num_pages * PS, np.int32)
+    for i in range(B):
+        fp = b.alloc_slot_prefix(i, int(lengths[i]))
+        flat_pos[i, :len(fp)] = fp
+    b.cache = kvc.paged_insert_rows(b.cache, scratch, jnp.arange(B),
+                                    jnp.arange(B), jnp.asarray(flat_pos))
+    copies = []
+    for i in range(B):
+        assert b.grow(i, int(lengths[i]) + 1, int(lengths[i]), copies)
+    b.apply_copies(copies)
+    tok = jnp.array([3, 7])
+    paged = (b.block_table_device(), PS)
+    ref, _ = M.decode_step(PARAMS, CFG, tok, b.cache, lengths, paged=paged)
+    out, _ = M.decode_step(PARAMS, CFG, tok, b.cache, lengths, paged=paged,
+                           use_pallas=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5)
+
+
 def test_paged_snapshot_roundtrip():
     """extract_snapshot returns a page-list blob (never densified) that
     insert_snapshot restores bit-identically into a fresh pool."""
@@ -276,6 +323,78 @@ def test_admission_pressure_still_completes():
             t.check_invariants()
     assert st_["admission_blocked"] > 0
     assert st_["page_preemptions"] > 0
+
+
+def test_preempt_flushes_pending_cow_before_snapshot():
+    """Deterministic repro of the COW-vs-snapshot ordering hazard: a slot
+    COWs a shared partial page (its block table now points at the copy
+    DESTINATION, whose batched scatter has not landed yet) and is then
+    preempted in the same _prepare_decode_pages round. _preempt_slot must
+    flush the pending copies before extract_snapshot, or the snapshot
+    captures the uninitialized destination page."""
+    L, PS = 6, 8                                   # partial trailing page
+    task = AdditionTask(max_value=20, seed=3)
+    ro = RolloutConfig(batch_size=1, group_size=2, max_prompt_len=16,
+                       max_response_len=24, concurrency=4, mode="copris",
+                       resume_strategy="kv_snapshot", kv_backend="paged",
+                       kv_page_size=PS)
+    eng = RolloutEngine(CFG, ro, task.sample_prompt, eos_id=EOS)
+    b = eng.backend
+    toks = jax.random.randint(jax.random.PRNGKey(6), (1, L), 0,
+                              CFG.vocab_size)
+    scratch = M.init_cache(CFG, 1, L)
+    _, scratch = M.prefill(PARAMS, CFG, toks, jnp.array([L]), scratch)
+    fp = b.alloc_slot_prefix(0, L)
+    b.cache = kvc.paged_insert_rows(b.cache, scratch, jnp.asarray([0]),
+                                    jnp.asarray([0]), jnp.asarray(fp[None]))
+    b.share_slots(0, 1, L)                         # prefix-shared group member
+    copies = []
+    assert b.grow(1, L + 1, L, copies) and copies  # COW queued, NOT applied
+
+    traj = Trajectory(group_id=0, sample_idx=1,
+                      prompt_tokens=np.asarray(toks[0], np.int32))
+    eng.slots[1] = traj
+    eng.cache_len[1] = L
+    eng.last_token[1] = 5
+    eng._stats = dict(page_preemptions=0)
+
+    class _Sched:
+        def requeue(self, t):
+            pass
+
+    eng._preempt_slot(1, _Sched(), copies)
+    assert not copies, "pending COW batch must be flushed, not carried"
+    assert traj.kv_snapshot is not None and traj.snap_cache_len == L
+
+    # restoring the snapshot must reproduce the shared source KV bit-exactly
+    b2 = _backend(pool=2, max_len=eng.max_len, ps=PS)
+    b2.insert_snapshot(traj.kv_snapshot, 0)
+    want, _ = M.decode_step(PARAMS, CFG, jnp.full((eng.pool,), 4), b.cache,
+                            jnp.full((eng.pool,), L, jnp.int32),
+                            paged=(b.block_table_device(), PS))
+    got, _ = M.decode_step(PARAMS, CFG, jnp.full((2,), 4), b2.cache,
+                           jnp.full((2,), L, jnp.int32),
+                           paged=(b2.block_table_device(), PS))
+    np.testing.assert_array_equal(np.asarray(want[0]), np.asarray(got[0]))
+
+
+def test_preemption_kv_snapshot_bitexact():
+    """Paged + resume_strategy='kv_snapshot' + mid-stage preemption under
+    page pressure, with prefix sharing live: a victim preempted in the same
+    _prepare_decode_pages round it COW'd must snapshot the FLUSHED pages,
+    not un-applied copy destinations — resumed trajectories stay
+    bit-identical to the dense run."""
+    gd, _ = _run("copris", "dense", resume_strategy="kv_snapshot")
+    gp, st_ = _run("copris", "paged", kv_page_size=8, kv_num_pages=8,
+                   resume_strategy="kv_snapshot")
+    assert st_["page_preemptions"] > 0
+    assert st_["shared_prefill_rows"] > 0
+    base, got = _tmap(gd), _tmap(gp)
+    common = set(base) & set(got)
+    assert common
+    for k in common:
+        assert base[k].response_tokens == got[k].response_tokens
+        assert base[k].behaviour_logps == got[k].behaviour_logps
 
 
 def test_paged_kv_snapshot_resume():
