@@ -26,13 +26,17 @@ def _time(fn, *args, iters=5):
 
 
 def main(rows_out):
+    # one subkey per section, one per tensor: reusing a key hands two
+    # "independent" samples the same bits (JAX102)
     key = jax.random.PRNGKey(0)
+    kflash, kdec, kwkv, kssm, klp, kpaged = jax.random.split(key, 6)
 
     # flash attention ref path (chunked jnp)
     from repro.models.attention import chunked_attention
-    q = jax.random.normal(key, (2, 512, 8, 64))
-    k = jax.random.normal(key, (2, 512, 2, 64))
-    v = jax.random.normal(key, (2, 512, 2, 64))
+    kq, kk, kv = jax.random.split(kflash, 3)
+    q = jax.random.normal(kq, (2, 512, 8, 64))
+    k = jax.random.normal(kk, (2, 512, 2, 64))
+    v = jax.random.normal(kv, (2, 512, 2, 64))
     f = jax.jit(lambda q, k, v: chunked_attention(q, k, v, causal=True,
                                                   q_offset=0))
     rows_out.append(("kernel_flash_attn_ref_512", _time(f, q, k, v),
@@ -40,9 +44,10 @@ def main(rows_out):
 
     # decode attention ref
     from repro.models.attention import decode_attention
-    qd = jax.random.normal(key, (8, 1, 8, 64))
-    kc = jax.random.normal(key, (8, 4096, 2, 64))
-    vc = jax.random.normal(key, (8, 4096, 2, 64))
+    kq, kk, kv = jax.random.split(kdec, 3)
+    qd = jax.random.normal(kq, (8, 1, 8, 64))
+    kc = jax.random.normal(kk, (8, 4096, 2, 64))
+    vc = jax.random.normal(kv, (8, 4096, 2, 64))
     cl = jnp.full((8,), 4000)
     f = jax.jit(lambda q, k, v, c: decode_attention(q, k, v, c))
     t_dense = _time(f, qd, kc, vc, cl)
@@ -70,19 +75,21 @@ def main(rows_out):
 
     # wkv6 ref
     from repro.models.rwkv6 import wkv6_scan
-    r = jax.random.normal(key, (2, 256, 4, 64)) * 0.5
-    w = jax.nn.sigmoid(jax.random.normal(key, (2, 256, 4, 64))) * 0.5 + 0.45
-    u = jax.random.normal(key, (4, 64)) * 0.3
+    kr, kw, ku = jax.random.split(kwkv, 3)
+    r = jax.random.normal(kr, (2, 256, 4, 64)) * 0.5
+    w = jax.nn.sigmoid(jax.random.normal(kw, (2, 256, 4, 64))) * 0.5 + 0.45
+    u = jax.random.normal(ku, (4, 64)) * 0.3
     s0 = jnp.zeros((2, 4, 64, 64))
     f = jax.jit(lambda r, w: wkv6_scan(r, r, r, w, u, s0)[0])
     rows_out.append(("kernel_wkv6_ref_256", _time(f, r, w), "B2 T256 H4 hd64"))
 
     # ssm ref
     from repro.models.ssm import selective_scan
-    x = jax.random.normal(key, (2, 256, 256)) * 0.5
-    dt = jax.nn.softplus(jax.random.normal(key, (2, 256, 256))) * 0.1
-    A = jnp.log(jnp.abs(jax.random.normal(key, (256, 16))) + 0.5)
-    Bc = jax.random.normal(key, (2, 256, 16)) * 0.5
+    kx, kdt, kA, kB = jax.random.split(kssm, 4)
+    x = jax.random.normal(kx, (2, 256, 256)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(kdt, (2, 256, 256))) * 0.1
+    A = jnp.log(jnp.abs(jax.random.normal(kA, (256, 16))) + 0.5)
+    Bc = jax.random.normal(kB, (2, 256, 16)) * 0.5
     D = jnp.ones((256,))
     s0 = jnp.zeros((2, 256, 16))
     f = jax.jit(lambda x, dt: selective_scan(x, dt, A, Bc, Bc, D, s0)[0])
@@ -90,9 +97,10 @@ def main(rows_out):
 
     # fused logprob ref (vocab-blocked)
     from repro.kernels.fused_logprob.ref import fused_logprob
-    h = jax.random.normal(key, (4, 128, 256)) * 0.3
-    wv = jax.random.normal(key, (256, 32000)) * 0.3
-    t = jax.random.randint(key, (4, 128), 0, 32000)
+    kh, kwv, kt = jax.random.split(klp, 3)
+    h = jax.random.normal(kh, (4, 128, 256)) * 0.3
+    wv = jax.random.normal(kwv, (256, 32000)) * 0.3
+    t = jax.random.randint(kt, (4, 128), 0, 32000)
     f = jax.jit(lambda h, w, t: fused_logprob(h, w, t, vocab_block=4096))
     rows_out.append(("kernel_fused_logprob_ref_32k", _time(f, h, wv, t),
                      "rows512 V32000 blocked"))
@@ -108,7 +116,7 @@ def main(rows_out):
 
     from repro.kernels.paged_decode_attn import ops as pda_ops
     B, NP, mp2, ps2 = 2, 12, 4, 16
-    ks = jax.random.split(key, 3)
+    ks = jax.random.split(kpaged, 3)
     q2 = jax.random.normal(ks[0], (B, 1, 8, 64))
     kp2 = jax.random.normal(ks[1], (NP, ps2, 2, 64))
     vp2 = jax.random.normal(ks[2], (NP, ps2, 2, 64))

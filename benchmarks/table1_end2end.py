@@ -84,6 +84,9 @@ def run_real_tiny(n_steps=4):
             trained_tokens += sum(len(t.response_tokens)
                                   for g in groups for t in g.trajectories)
             syncs += stats["host_syncs"]
+        # the last decode chunk is dispatched asynchronously — force it to
+        # finish before stamping, or the timing excludes real compute
+        jax.block_until_ready(eng.cache)
         out[name] = (time.perf_counter() - t0, trained_tokens, syncs)
     return out
 

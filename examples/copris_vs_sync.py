@@ -31,6 +31,7 @@ for mode, conc in [("sync", 0), ("naive_partial", 48), ("copris", 16)]:
         _, st = eng.collect(params, s + 1, jax.random.PRNGKey(s))
         gen += st["generated"]; resumed += st["resumed"]
         util.append(st["utilization"])
+    jax.block_until_ready(eng.cache)   # don't time async dispatch only
     dt = time.perf_counter() - t0
     print(f"{mode:16s} {eng.pool:4d} {gen/dt:8.1f} "
           f"{sum(util)/len(util):6.2f} {resumed:8d}")

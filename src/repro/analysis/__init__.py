@@ -1,0 +1,14 @@
+"""Static analysis suite for this repo: jaxlint + pallaslint + racelint.
+
+Run with ``python -m repro.analysis`` (or the ``repro-analysis`` console
+script). See ``--explain`` for per-rule documentation and
+``docs/analysis_rules.md`` for the generated reference.
+"""
+from repro.analysis.core import (  # noqa: F401
+    Finding,
+    ModuleCtx,
+    ProjectReport,
+    Rule,
+    all_rules,
+)
+from repro.analysis.cli import main, run_paths, rules_markdown  # noqa: F401

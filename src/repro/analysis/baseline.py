@@ -1,0 +1,79 @@
+"""Baseline file handling: grandfathered findings with justifications.
+
+The baseline (``analysis_baseline.json`` at the repo root) is the list of
+findings we have LOOKED AT and decided to keep, each with a one-line
+justification. CI fails on any finding not in it — so the file can only
+shrink silently, never grow: adding to it is a reviewed diff stating why
+the hazard is intentional.
+
+Entries match by content fingerprint (rule + path + enclosing scope +
+normalized source line), so unrelated edits that shift line numbers do
+not invalidate the baseline — changing the flagged line itself does.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Tuple
+
+from repro.analysis.core import Finding
+
+TODO_JUSTIFICATION = "TODO: justify or fix"
+
+
+def load_baseline(path: str) -> Dict[str, dict]:
+    """fingerprint -> entry. Missing file = empty baseline."""
+    if not os.path.exists(path):
+        return {}
+    with open(path, "r", encoding="utf-8") as fh:
+        data = json.load(fh)
+    out: Dict[str, dict] = {}
+    for e in data.get("entries", []):
+        out[e["fingerprint"]] = e
+    return out
+
+
+def split_findings(findings: List[Finding], baseline: Dict[str, dict],
+                   ) -> Tuple[List[Finding], List[Finding], List[dict]]:
+    """(new, baselined, stale_entries). Stale entries are baseline rows
+    whose finding no longer exists — candidates for deletion."""
+    new, old = [], []
+    matched = set()
+    for f in findings:
+        if f.fingerprint in baseline:
+            old.append(f)
+            matched.add(f.fingerprint)
+        else:
+            new.append(f)
+    stale = [e for fp, e in baseline.items() if fp not in matched]
+    return new, old, stale
+
+
+def write_baseline(findings: List[Finding], path: str,
+                   existing: Dict[str, dict]) -> int:
+    """Write a baseline covering every current finding, preserving
+    justifications already present. Returns the entry count."""
+    entries = []
+    for f in sorted(findings, key=lambda f: (f.path, f.rule, f.line)):
+        prev = existing.get(f.fingerprint, {})
+        entries.append({
+            "rule": f.rule,
+            "path": f.path,
+            "line": f.line,
+            "context": f.context,
+            "src": f.src_line,
+            "fingerprint": f.fingerprint,
+            "justification": prev.get("justification",
+                                      TODO_JUSTIFICATION),
+        })
+    doc = {
+        "_comment": ("Grandfathered repro.analysis findings. Every entry "
+                     "needs a real justification — 'line' is informational"
+                     ", matching is by fingerprint. Regenerate with "
+                     "`python -m repro.analysis --write-baseline`."),
+        "entries": entries,
+    }
+    with open(path, "w", encoding="utf-8") as fh:
+        json.dump(doc, fh, indent=2, sort_keys=False)
+        fh.write("\n")
+    return len(entries)

@@ -1,0 +1,222 @@
+"""``python -m repro.analysis`` / ``repro-analysis`` — run the analyzer.
+
+Exit codes: 0 = clean (no findings outside the baseline), 1 = new
+findings or unparsable files, 2 = usage error (argparse).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from dataclasses import asdict
+from typing import List, Optional
+
+from repro.analysis.baseline import (
+    load_baseline,
+    split_findings,
+    write_baseline,
+)
+from repro.analysis.core import (
+    Finding,
+    ModuleCtx,
+    ProjectReport,
+    all_rules,
+    finalize_fingerprints,
+)
+
+DEFAULT_ROOTS = ("src", "benchmarks", "examples")
+DEFAULT_BASELINE = "analysis_baseline.json"
+
+
+def _iter_py_files(paths) -> List[str]:
+    out: List[str] = []
+    for p in paths:
+        if os.path.isfile(p) and p.endswith(".py"):
+            out.append(p)
+        elif os.path.isdir(p):
+            for root, dirs, files in os.walk(p):
+                dirs[:] = sorted(d for d in dirs
+                                 if not d.startswith(".")
+                                 and d != "__pycache__")
+                for f in sorted(files):
+                    if f.endswith(".py"):
+                        out.append(os.path.join(root, f))
+    return sorted(set(out))
+
+
+def _rel(path: str) -> str:
+    rp = os.path.relpath(path)
+    return rp.replace(os.sep, "/")
+
+
+def run_paths(paths, select=None, ignore=None) -> ProjectReport:
+    """Scan ``paths`` (files or directories) with all registered rules."""
+    rules = [cls() for rid, cls in all_rules().items()
+             if (not select or any(rid.startswith(s) for s in select))
+             and not (ignore and any(rid.startswith(s) for s in ignore))]
+    report = ProjectReport()
+    files = _iter_py_files(paths)
+    relpaths = [_rel(f) for f in files]
+    for fpath, rpath in zip(files, relpaths):
+        try:
+            with open(fpath, "r", encoding="utf-8") as fh:
+                src = fh.read()
+            ctx = ModuleCtx(rpath, src)
+        except (SyntaxError, UnicodeDecodeError) as e:
+            report.parse_errors.append(f"{rpath}: {e}")
+            continue
+        report.files_scanned += 1
+        for rule in rules:
+            if rule.applies_to(rpath):
+                report.findings.extend(rule.check(ctx))
+    for rule in rules:
+        report.findings.extend(rule.check_project(relpaths))
+    report.findings.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
+    finalize_fingerprints(report.findings)
+    return report
+
+
+# ---------------------------------------------------------------------------
+# output formats
+# ---------------------------------------------------------------------------
+
+
+def _fmt_text(new, old, stale, report, out):
+    for f in new:
+        print(f"{f.location()}: {f.severity}: {f.rule} {f.message} "
+              f"[{f.fingerprint}]", file=out)
+    if old:
+        print(f"({len(old)} baselined finding(s) suppressed)", file=out)
+    for e in stale:
+        print(f"note: stale baseline entry {e['fingerprint']} "
+              f"({e['rule']} {e['path']}) — finding no longer exists, "
+              "remove it", file=out)
+    print(f"{report.files_scanned} files scanned, {len(new)} new "
+          f"finding(s), {len(old)} baselined", file=out)
+
+
+def _fmt_github(new, old, stale, report, out):
+    rules = all_rules()
+    for f in new:
+        kind = "error" if f.severity == "error" else "warning"
+        title = f"{f.rule} {rules[f.rule].title}" if f.rule in rules \
+            else f.rule
+        msg = f.message.replace("%", "%25").replace("\n", "%0A")
+        print(f"::{kind} file={f.path},line={f.line},col={f.col},"
+              f"title={title}::{msg}", file=out)
+    print(f"{report.files_scanned} files scanned, {len(new)} new "
+          f"finding(s), {len(old)} baselined", file=out)
+
+
+def _report_json(new, old, stale, report) -> dict:
+    return {
+        "files_scanned": report.files_scanned,
+        "new": [asdict(f) for f in new],
+        "baselined": [asdict(f) for f in old],
+        "stale_baseline_entries": stale,
+        "parse_errors": report.parse_errors,
+    }
+
+
+def rules_markdown() -> str:
+    """The rule reference, generated from the rule docstrings."""
+    groups = [("jaxlint (JAX1xx)", "JAX"),
+              ("pallaslint (PAL2xx)", "PAL"),
+              ("racelint (RACE3xx)", "RACE")]
+    lines = ["# repro.analysis rule reference",
+             "",
+             "Generated from the rule docstrings by "
+             "`python -m repro.analysis --rules-md`. Do not edit by hand.",
+             ""]
+    rules = all_rules()
+    for heading, prefix in groups:
+        lines += [f"## {heading}", ""]
+        for rid, cls in rules.items():
+            if not rid.startswith(prefix):
+                continue
+            lines += [f"### {rid} — {cls.title} ({cls.severity})", "",
+                      cls.doc(), ""]
+    return "\n".join(lines).rstrip() + "\n"
+
+
+def _explain(which: Optional[str], out) -> int:
+    rules = all_rules()
+    if which and which != "all":
+        if which not in rules:
+            print(f"unknown rule {which!r}; known: "
+                  f"{', '.join(rules)}", file=sys.stderr)
+            return 2
+        sel = {which: rules[which]}
+    else:
+        sel = rules
+    for rid, cls in sel.items():
+        print(f"{rid} ({cls.severity}) — {cls.title}\n", file=out)
+        print(cls.doc() + "\n", file=out)
+    return 0
+
+
+# ---------------------------------------------------------------------------
+# entry point
+# ---------------------------------------------------------------------------
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro-analysis",
+        description="JAX/Pallas/concurrency static analysis for this repo")
+    ap.add_argument("paths", nargs="*", default=None,
+                    help=f"files or dirs (default: {' '.join(DEFAULT_ROOTS)})")
+    ap.add_argument("--format", "-f", choices=("text", "github", "json"),
+                    default="text")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help="baseline file (default: %(default)s)")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="ignore the baseline file entirely")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="write/refresh the baseline from current findings")
+    ap.add_argument("--output", default=None,
+                    help="also write the full JSON report to this path")
+    ap.add_argument("--select", default=None,
+                    help="comma-separated rule id prefixes to run")
+    ap.add_argument("--ignore", default=None,
+                    help="comma-separated rule id prefixes to skip")
+    ap.add_argument("--explain", nargs="?", const="all", default=None,
+                    metavar="RULE", help="print rule documentation and exit")
+    ap.add_argument("--rules-md", action="store_true",
+                    help="print the generated markdown rule reference")
+    args = ap.parse_args(argv)
+
+    if args.rules_md:
+        sys.stdout.write(rules_markdown())
+        return 0
+    if args.explain is not None:
+        return _explain(args.explain, sys.stdout)
+
+    paths = args.paths or [p for p in DEFAULT_ROOTS if os.path.isdir(p)]
+    select = args.select.split(",") if args.select else None
+    ignore = args.ignore.split(",") if args.ignore else None
+    report = run_paths(paths, select=select, ignore=ignore)
+
+    baseline = {} if args.no_baseline else load_baseline(args.baseline)
+    if args.write_baseline:
+        n = write_baseline(report.findings, args.baseline, baseline)
+        print(f"wrote {n} entries to {args.baseline}")
+        return 0
+
+    new, old, stale = split_findings(report.findings, baseline)
+    if args.output:
+        with open(args.output, "w", encoding="utf-8") as fh:
+            json.dump(_report_json(new, old, stale, report), fh, indent=2)
+            fh.write("\n")
+    if args.format == "json":
+        json.dump(_report_json(new, old, stale, report), sys.stdout,
+                  indent=2)
+        print()
+    elif args.format == "github":
+        _fmt_github(new, old, stale, report, sys.stdout)
+    else:
+        _fmt_text(new, old, stale, report, sys.stdout)
+    for err in report.parse_errors:
+        print(f"parse error: {err}", file=sys.stderr)
+    return 1 if (new or report.parse_errors) else 0

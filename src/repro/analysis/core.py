@@ -1,0 +1,241 @@
+"""Rule registry, findings, and shared AST machinery for ``repro.analysis``.
+
+The analyzer is a pure-AST pass: no file it scans is ever imported, no JAX
+is loaded, and a full-repo run is sub-second — cheap enough to gate every
+PR. Three rule groups register here:
+
+* ``jaxlint``   (JAX1xx)  — host-sync / PRNG / donation / timing hazards;
+* ``pallaslint`` (PAL2xx) — the Pallas kernel-family contract;
+* ``racelint``  (RACE3xx) — lock discipline over the concurrent core.
+
+Every rule is a :class:`Rule` subclass with a stable ``id``, a
+``severity``, and a docstring that IS its user-facing documentation
+(rendered by ``--explain`` and ``--rules-md``). Findings carry a content
+fingerprint (rule, path, enclosing scope, normalized source line) so the
+checked-in baseline survives unrelated line shifts.
+"""
+from __future__ import annotations
+
+import ast
+import hashlib
+import inspect
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Type
+
+SEV_ERROR = "error"
+SEV_WARNING = "warning"
+
+
+@dataclass
+class Finding:
+    rule: str
+    severity: str
+    path: str                      # repo-relative, forward slashes
+    line: int
+    col: int
+    message: str
+    context: str = "<module>"      # enclosing class/function qualname
+    src_line: str = ""             # the offending source line, stripped
+    fingerprint: str = ""          # filled by finalize_fingerprints()
+
+    def location(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}"
+
+
+def _norm(src_line: str) -> str:
+    return " ".join(src_line.split())
+
+
+def finalize_fingerprints(findings: List[Finding]) -> None:
+    """Assign stable fingerprints: hash of (rule, path, context, normalized
+    line text) plus an occurrence index so duplicate lines stay distinct."""
+    seen: Dict[str, int] = {}
+    for f in sorted(findings, key=lambda f: (f.path, f.line, f.col, f.rule)):
+        base = f"{f.rule}|{f.path}|{f.context}|{_norm(f.src_line)}"
+        idx = seen.get(base, 0)
+        seen[base] = idx + 1
+        h = hashlib.sha1(f"{base}|{idx}".encode()).hexdigest()[:16]
+        f.fingerprint = h
+
+
+# ---------------------------------------------------------------------------
+# module context
+# ---------------------------------------------------------------------------
+
+
+class ModuleCtx:
+    """One parsed module handed to each rule's ``check``."""
+
+    def __init__(self, path: str, source: str):
+        self.path = path               # repo-relative
+        self.source = source
+        self.lines = source.splitlines()
+        self.tree = ast.parse(source, filename=path)
+        _attach_parents(self.tree)
+
+    def src(self, node: ast.AST) -> str:
+        ln = getattr(node, "lineno", 0)
+        if 1 <= ln <= len(self.lines):
+            return self.lines[ln - 1].strip()
+        return ""
+
+    def scope_of(self, node: ast.AST) -> str:
+        """Qualname of the innermost enclosing class/function."""
+        parts: List[str] = []
+        cur = getattr(node, "parent", None)
+        while cur is not None:
+            if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                ast.ClassDef)):
+                parts.append(cur.name)
+            cur = getattr(cur, "parent", None)
+        return ".".join(reversed(parts)) or "<module>"
+
+    def finding(self, rule: "Rule", node: ast.AST, message: str) -> Finding:
+        return Finding(rule=rule.id, severity=rule.severity, path=self.path,
+                       line=getattr(node, "lineno", 1),
+                       col=getattr(node, "col_offset", 0) + 1,
+                       message=message, context=self.scope_of(node),
+                       src_line=self.src(node))
+
+
+def _attach_parents(tree: ast.AST) -> None:
+    for parent in ast.walk(tree):
+        for child in ast.iter_child_nodes(parent):
+            child.parent = parent  # type: ignore[attr-defined]
+
+
+# ---------------------------------------------------------------------------
+# AST helpers shared by the rule groups
+# ---------------------------------------------------------------------------
+
+
+def dotted(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` for Name/Attribute chains, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def call_name(call: ast.Call) -> Optional[str]:
+    return dotted(call.func)
+
+
+def kw(call: ast.Call, name: str) -> Optional[ast.expr]:
+    for k in call.keywords:
+        if k.arg == name:
+            return k.value
+    return None
+
+
+def const_strs(node: Optional[ast.expr]) -> List[str]:
+    """Literal tuple/list of strings -> list (else [])."""
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return [e.value for e in node.elts
+                if isinstance(e, ast.Constant) and isinstance(e.value, str)]
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return [node.value]
+    return []
+
+
+def const_ints(node: Optional[ast.expr]) -> List[int]:
+    """Literal int or tuple/list of ints -> list (else [])."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return [node.value]
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return [e.value for e in node.elts
+                if isinstance(e, ast.Constant) and isinstance(e.value, int)]
+    return []
+
+
+def func_defs(tree: ast.AST):
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node
+
+
+def param_names(fn) -> List[str]:
+    a = fn.args
+    names = [p.arg for p in a.posonlyargs + a.args + a.kwonlyargs]
+    if a.vararg:
+        names.append(a.vararg.arg)
+    if a.kwarg:
+        names.append(a.kwarg.arg)
+    return names
+
+
+def walk_stmts_in_order(body: List[ast.stmt]):
+    """Yield every statement of a body, flattened recursively in source
+    order (loop/with/if bodies inline). Nested function/class defs are NOT
+    descended into — they execute in their own scope/time."""
+    for stmt in body:
+        yield stmt
+        for attr in ("body", "orelse", "finalbody"):
+            inner = getattr(stmt, attr, None)
+            if inner and not isinstance(stmt, (ast.FunctionDef,
+                                               ast.AsyncFunctionDef,
+                                               ast.ClassDef)):
+                yield from walk_stmts_in_order(inner)
+        for h in getattr(stmt, "handlers", []) or []:
+            yield from walk_stmts_in_order(h.body)
+
+
+# ---------------------------------------------------------------------------
+# rule base + registry
+# ---------------------------------------------------------------------------
+
+
+class Rule:
+    """Base class. Subclasses set ``id``, ``severity``, ``title`` and
+    implement :meth:`check`; the class docstring is the rule's reference
+    documentation (``--explain`` / ``--rules-md``)."""
+
+    id: str = ""
+    severity: str = SEV_WARNING
+    title: str = ""
+    #: which scanned files the rule runs on (substring match on the
+    #: repo-relative path; empty = every file)
+    path_filters: tuple = ()
+
+    def applies_to(self, relpath: str) -> bool:
+        if not self.path_filters:
+            return True
+        return any(p in relpath for p in self.path_filters)
+
+    def check(self, ctx: ModuleCtx) -> List[Finding]:  # pragma: no cover
+        raise NotImplementedError
+
+    def check_project(self, relpaths: List[str]) -> List[Finding]:
+        """Project-level pass over the full scanned file list (e.g. layout
+        contracts). Runs once per analysis run, after per-module checks."""
+        return []
+
+    @classmethod
+    def doc(cls) -> str:
+        return inspect.cleandoc(cls.__doc__ or "")
+
+
+_REGISTRY: Dict[str, Type[Rule]] = {}
+
+
+def register(cls: Type[Rule]) -> Type[Rule]:
+    assert cls.id and cls.id not in _REGISTRY, f"bad rule id {cls.id!r}"
+    _REGISTRY[cls.id] = cls
+    return cls
+
+
+def all_rules() -> Dict[str, Type[Rule]]:
+    """id -> rule class, importing the rule groups on first use."""
+    from repro.analysis import jaxlint, pallaslint, racelint  # noqa: F401
+    return dict(sorted(_REGISTRY.items()))
+
+
+@dataclass
+class ProjectReport:
+    findings: List[Finding] = field(default_factory=list)
+    files_scanned: int = 0
+    parse_errors: List[str] = field(default_factory=list)

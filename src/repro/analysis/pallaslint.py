@@ -1,0 +1,344 @@
+"""pallaslint (PAL2xx): the Pallas kernel-family contract.
+
+Every kernel family under ``src/repro/kernels/<family>/`` follows one
+shape, and the test suite + benchmarks depend on it: a ``ref.py`` jnp
+oracle, an ``ops.py`` public wrapper with an interpret-mode fallback (so
+CPU CI exercises the real kernel body), and the kernel module named after
+its directory. Grid construction must pad or assert before floor-dividing
+shapes, and scalar-prefetch ``index_map``\\s must be pure — they run at
+trace time on every grid step and any side effect or host call there is a
+silent miscompile hazard.
+
+All rules here are restricted to paths containing ``kernels/``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set
+
+from repro.analysis.core import (
+    SEV_ERROR,
+    SEV_WARNING,
+    Finding,
+    ModuleCtx,
+    Rule,
+    call_name,
+    dotted,
+    func_defs,
+    kw,
+    param_names,
+    register,
+)
+
+ALLOWED_INDEX_MAP_PREFIXES = ("jnp", "jax", "pl", "pltpu", "lax")
+ALLOWED_INDEX_MAP_BUILTINS = {"min", "max", "abs", "divmod", "int", "sum",
+                              "len", "tuple"}
+
+
+def _unparse(node: ast.AST) -> str:
+    try:
+        return " ".join(ast.unparse(node).split())
+    except Exception:  # pragma: no cover - unparse is total on valid ASTs
+        return ""
+
+
+# ---------------------------------------------------------------------------
+# PAL201 — family layout
+# ---------------------------------------------------------------------------
+
+
+@register
+class KernelFamilyLayout(Rule):
+    """A kernel family directory is missing part of the ref/ops/kernel
+    triple.
+
+    Each ``src/repro/kernels/<family>/`` must ship ``ref.py`` (the jnp
+    reference oracle every correctness test compares against), ``ops.py``
+    (the public entry point with the interpret fallback), and
+    ``<family>.py`` (the Pallas kernel module named after its directory).
+    A family missing any leg either has no oracle, no public API, or an
+    unfindable kernel — and kernelbench / the pallas test markers key off
+    this layout.
+
+    Fix: add the missing module; if a family is intentionally ref-only,
+    it does not belong under ``kernels/``.
+    """
+
+    id = "PAL201"
+    severity = SEV_ERROR
+    title = "kernel family missing ref.py / ops.py / <family>.py"
+    path_filters = ("kernels/",)
+
+    def check(self, ctx: ModuleCtx) -> List[Finding]:
+        return []
+
+    def check_project(self, relpaths: List[str]) -> List[Finding]:
+        fams: Dict[str, Set[str]] = {}
+        for p in relpaths:
+            if "kernels/" not in p or not p.endswith(".py"):
+                continue
+            tail = p.split("kernels/", 1)[1]
+            parts = tail.split("/")
+            if len(parts) != 2:            # files at kernels/ root are free
+                continue
+            fams.setdefault(parts[0], set()).add(parts[1])
+        out: List[Finding] = []
+        for fam, files in sorted(fams.items()):
+            dirpath = "src/repro/kernels/" + fam
+            needed = {"ref.py", "ops.py", fam + ".py"}
+            missing = sorted(needed - files)
+            if missing:
+                out.append(Finding(
+                    rule=self.id, severity=self.severity, path=dirpath,
+                    line=1, col=1,
+                    message=(f"kernel family {fam!r} is missing "
+                             f"{', '.join(missing)} (contract: ref.py + "
+                             f"ops.py + {fam}.py)"),
+                    context="<family>", src_line=fam))
+        return out
+
+
+# ---------------------------------------------------------------------------
+# PAL202 — interpret fallback
+# ---------------------------------------------------------------------------
+
+
+@register
+class InterpretFallback(Rule):
+    """An ops.py kernel wrapper does not expose a working interpret
+    fallback.
+
+    CPU CI has no TPU: the only way the real kernel body runs in tier-1 is
+    Pallas interpret mode. The contract is an ``interpret=None`` keyword on
+    the public wrapper that defaults via ``jax.default_backend() == "cpu"``
+    (directly or through a module-local helper). A wrapper without it
+    either hard-fails on CPU or silently never tests the kernel.
+
+    Detection: every ``kernels/*/ops.py`` must contain at least one
+    function with an ``interpret`` parameter, and each such function must
+    resolve it against ``jax.default_backend() == "cpu"`` in its body or
+    in a local helper it calls.
+
+    Fix: ``interp = (jax.default_backend() == "cpu") if interpret is None
+    else interpret`` and thread ``interp`` into ``pl.pallas_call``.
+    """
+
+    id = "PAL202"
+    severity = SEV_ERROR
+    title = "ops wrapper missing interpret fallback"
+    path_filters = ("kernels/",)
+
+    def check(self, ctx: ModuleCtx) -> List[Finding]:
+        if not ctx.path.endswith("/ops.py"):
+            return []
+        findings: List[Finding] = []
+        top = [n for n in ctx.tree.body
+               if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]
+        with_param = [f for f in top if "interpret" in param_names(f)]
+        if not with_param:
+            findings.append(Finding(
+                rule=self.id, severity=self.severity, path=ctx.path, line=1,
+                col=1, message=("ops module has no function with an "
+                                "'interpret' parameter — kernel body is "
+                                "untestable on CPU CI"),
+                context="<module>", src_line=ctx.lines[0] if ctx.lines
+                else ""))
+            return findings
+        local = {f.name: f for f in top}
+        for f in with_param:
+            if not self._resolves_cpu(f, local, depth=2):
+                findings.append(ctx.finding(
+                    self, f,
+                    f"{f.name}() takes 'interpret' but never defaults it "
+                    "from jax.default_backend() == 'cpu'"))
+        return findings
+
+    def _resolves_cpu(self, fn, local, depth) -> bool:
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Compare):
+                sides = [node.left] + list(node.comparators)
+                has_backend = any(
+                    isinstance(s, ast.Call)
+                    and (call_name(s) or "").endswith("default_backend")
+                    for s in sides)
+                has_cpu = any(isinstance(s, ast.Constant)
+                              and s.value == "cpu" for s in sides)
+                if has_backend and has_cpu:
+                    return True
+        if depth <= 0:
+            return False
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call):
+                name = call_name(node)
+                if name in local and local[name] is not fn:
+                    if self._resolves_cpu(local[name], local, depth - 1):
+                        return True
+        return False
+
+
+# ---------------------------------------------------------------------------
+# PAL203 — grid divisibility
+# ---------------------------------------------------------------------------
+
+
+@register
+class GridDivisibility(Rule):
+    """A grid dimension floor-divides a shape without a pad or assert on
+    the same divisor.
+
+    ``grid=(T // block,)`` silently DROPS the ragged tail when ``T`` is
+    not a multiple of ``block`` — the kernel runs, numbers come out, and
+    the last partial block of work never happens. Every floor-division
+    feeding a ``grid=`` must be preceded (in the same function) by either
+    the repo's pad idiom ``pad = (-T) % block`` or an explicit
+    ``assert T % block == 0``.
+
+    Detection: for each ``grid=`` keyword, floor-divisions that produce it
+    (inline or via a local assignment) are collected; if the enclosing
+    function contains no ``% <same divisor>`` expression, the division is
+    flagged.
+
+    Fix: pad (``x = jnp.pad(x, ...)`` after ``(-T) % block``) or assert
+    divisibility before building the grid.
+    """
+
+    id = "PAL203"
+    severity = SEV_WARNING
+    title = "grid floor-division without pad/assert on the divisor"
+    path_filters = ("kernels/",)
+
+    def check(self, ctx: ModuleCtx) -> List[Finding]:
+        findings: List[Finding] = []
+        for fn in func_defs(ctx.tree):
+            self._check_fn(ctx, fn, findings)
+        return findings
+
+    def _check_fn(self, ctx, fn, findings):
+        grid_exprs: List[ast.expr] = []
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call):
+                g = kw(node, "grid")
+                if g is not None:
+                    grid_exprs.append(g)
+        if not grid_exprs:
+            return
+        # names flowing into grid exprs + inline floordivs inside them
+        grid_names: Set[str] = set()
+        floordivs: List[ast.BinOp] = []
+        for g in grid_exprs:
+            for n in ast.walk(g):
+                if isinstance(n, ast.Name):
+                    grid_names.add(n.id)
+                if isinstance(n, ast.BinOp) and isinstance(n.op,
+                                                           ast.FloorDiv):
+                    floordivs.append(n)
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign) and len(node.targets) == 1:
+                t = node.targets[0]
+                if isinstance(t, ast.Name) and t.id in grid_names:
+                    for n in ast.walk(node.value):
+                        if isinstance(n, ast.BinOp) and \
+                                isinstance(n.op, ast.FloorDiv):
+                            floordivs.append(n)
+        # mod-expressions present anywhere in the function
+        mods: Set[str] = set()
+        for node in ast.walk(fn):
+            if isinstance(node, ast.BinOp) and isinstance(node.op, ast.Mod):
+                mods.add(_unparse(node.right))
+        for div in floordivs:
+            divisor = _unparse(div.right)
+            if divisor and divisor not in mods:
+                findings.append(ctx.finding(
+                    self, div,
+                    f"grid dimension '{_unparse(div)}' has no "
+                    f"'% {divisor}' pad or assert in {fn.name}() — ragged "
+                    "tail would be silently dropped"))
+
+
+# ---------------------------------------------------------------------------
+# PAL204 — index_map purity
+# ---------------------------------------------------------------------------
+
+
+@register
+class IndexMapPurity(Rule):
+    """A BlockSpec ``index_map`` has side effects or calls host code.
+
+    ``index_map`` runs as part of grid lowering — scalar-prefetch maps
+    (``PrefetchScalarGridSpec``) are re-evaluated per grid step on the
+    device. Writing state, printing, or calling arbitrary Python from one
+    is at best ignored and at worst a silent miscompile (the paged-decode
+    block-table walk depends on its map being a pure function of the grid
+    indices and prefetch refs).
+
+    Detection: every ``BlockSpec(...)`` index_map (2nd positional or
+    ``index_map=`` keyword; lambda or module-local def) is checked for
+    attribute/subscript stores, ``global``/``nonlocal``, ``print``, and
+    calls outside jnp/jax/pl/pltpu/lax + arithmetic builtins.
+
+    Fix: compute indices only from the map's arguments with jnp/pl ops.
+    """
+
+    id = "PAL204"
+    severity = SEV_ERROR
+    title = "impure BlockSpec index_map"
+    path_filters = ("kernels/",)
+
+    def check(self, ctx: ModuleCtx) -> List[Finding]:
+        findings: List[Finding] = []
+        local = {f.name: f for f in func_defs(ctx.tree)}
+        seen: Set[int] = set()
+        for node in ast.walk(ctx.tree):
+            if not (isinstance(node, ast.Call)
+                    and (call_name(node) or "").split(".")[-1]
+                    == "BlockSpec"):
+                continue
+            imap = kw(node, "index_map")
+            if imap is None and len(node.args) >= 2:
+                imap = node.args[1]
+            if imap is None:
+                continue
+            fn: Optional[ast.AST] = None
+            if isinstance(imap, ast.Lambda):
+                fn = imap
+            elif isinstance(imap, ast.Name) and imap.id in local:
+                fn = local[imap.id]
+            if fn is None or id(fn) in seen:
+                continue
+            seen.add(id(fn))
+            findings.extend(self._check_map(ctx, fn))
+        return findings
+
+    def _check_map(self, ctx, fn) -> List[Finding]:
+        out: List[Finding] = []
+        for node in ast.walk(fn):
+            if isinstance(node, (ast.Global, ast.Nonlocal)):
+                out.append(ctx.finding(
+                    self, node, "global/nonlocal inside an index_map"))
+            elif isinstance(node, (ast.Attribute, ast.Subscript)) and \
+                    isinstance(node.ctx, (ast.Store, ast.Del)):
+                out.append(ctx.finding(
+                    self, node,
+                    "index_map stores to "
+                    f"'{_unparse(node)}' — index_maps must be pure"))
+            elif isinstance(node, ast.Call):
+                name = call_name(node)
+                if name is None:
+                    continue
+                head, last = name.split(".")[0], name.split(".")[-1]
+                if name == "print" or last == "print":
+                    out.append(ctx.finding(
+                        self, node, "print() inside an index_map"))
+                elif "." in name:
+                    if head not in ALLOWED_INDEX_MAP_PREFIXES:
+                        out.append(ctx.finding(
+                            self, node,
+                            f"index_map calls {name}() — only jnp/jax/pl/"
+                            "pltpu/lax and arithmetic builtins are pure "
+                            "here"))
+                elif name not in ALLOWED_INDEX_MAP_BUILTINS:
+                    out.append(ctx.finding(
+                        self, node,
+                        f"index_map calls {name}() — only jnp/jax/pl/"
+                        "pltpu/lax and arithmetic builtins are pure here"))
+        return out

@@ -1,0 +1,435 @@
+"""racelint (RACE3xx): lock discipline over the concurrent core.
+
+The trainer is a real producer/consumer system: a background thread owns
+the rollout engine while the consumer trains, `ParamStore` hands weights
+across threads, and `ServeEngine.submit` may be called mid-stage. PR 2
+fixed an unlocked shared map here and PR 6's review caught an ordering
+race — this group turns that review into a machine check.
+
+Model (per class, per module): lock attributes are ``self.X =
+threading.Lock()/RLock()/Condition()/Semaphore()`` assignments; a write is
+``self.attr = ...`` / ``self.attr[k] = ...`` / a mutating method call
+(``append``/``pop``/``update``/...) on ``self.attr``; the guard of a
+write is the set of ``with self.<lock>:`` blocks lexically holding it.
+``__init__`` writes are pre-concurrency and exempt. Reads are exempt —
+flagging every unlocked read would drown the signal; the write side is
+where corruption happens.
+
+Restricted to ``core/`` and ``launch/serve.py``.
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+from typing import Dict, FrozenSet, List, Set, Tuple
+
+from repro.analysis.core import (
+    SEV_ERROR,
+    Finding,
+    ModuleCtx,
+    Rule,
+    call_name,
+    dotted,
+    kw,
+    register,
+)
+
+LOCK_FACTORIES = {"Lock", "RLock", "Condition", "Semaphore",
+                  "BoundedSemaphore"}
+MUTATORS = {"append", "appendleft", "extend", "add", "remove", "discard",
+            "pop", "popleft", "popitem", "clear", "update", "setdefault",
+            "insert", "put", "put_nowait", "sort", "reverse"}
+
+RACE_PATHS = ("core/", "launch/serve.py")
+
+
+@dataclass
+class WriteRec:
+    attr: str
+    method: str
+    held: FrozenSet[str]
+    node: ast.AST
+
+
+@dataclass
+class ClassInfo:
+    name: str
+    node: ast.ClassDef
+    locks: Set[str] = field(default_factory=set)
+    writes: List[WriteRec] = field(default_factory=list)
+    # method -> set of self-methods it calls
+    calls: Dict[str, Set[str]] = field(default_factory=dict)
+    # (held_lock, acquired_lock, node) for every nested acquisition
+    acq_edges: List[Tuple[str, str, ast.AST]] = field(default_factory=list)
+    # (held_locks, callee_method, node) for calls made while holding
+    held_calls: List[Tuple[FrozenSet[str], str, ast.AST]] = \
+        field(default_factory=list)
+    # method -> locks it acquires directly
+    acquired_in: Dict[str, Set[str]] = field(default_factory=dict)
+    thread_targets: Set[str] = field(default_factory=set)
+    methods: Set[str] = field(default_factory=set)
+
+
+def analyze_classes(ctx: ModuleCtx) -> List[ClassInfo]:
+    out = []
+    for node in ctx.tree.body:
+        if isinstance(node, ast.ClassDef):
+            out.append(_analyze_class(node))
+    return out
+
+
+def _analyze_class(cls: ast.ClassDef) -> ClassInfo:
+    info = ClassInfo(cls.name, cls)
+    methods = [n for n in cls.body
+               if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]
+    info.methods = {m.name for m in methods}
+    # pass 1: lock attributes (usually from __init__)
+    for m in methods:
+        for n in ast.walk(m):
+            if isinstance(n, ast.Assign) and isinstance(n.value, ast.Call):
+                cn = (call_name(n.value) or "").split(".")[-1]
+                if cn in LOCK_FACTORIES:
+                    for t in n.targets:
+                        d = dotted(t)
+                        if d and d.startswith("self."):
+                            info.locks.add(d[5:])
+    # pass 2: per-method walk with a held-lock stack
+    for m in methods:
+        info.calls.setdefault(m.name, set())
+        info.acquired_in.setdefault(m.name, set())
+        _walk_method(info, m, m.body, [])
+    return info
+
+
+def _self_attr(node) -> str:
+    d = dotted(node)
+    if d and d.startswith("self.") and len(d) > 5:
+        return d[5:]
+    return ""
+
+
+def _walk_method(info: ClassInfo, m, body, held: List[str]):
+    for stmt in body:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            continue                      # closures run on their own time
+        if isinstance(stmt, ast.With):
+            acquired = []
+            for item in stmt.items:
+                a = _self_attr(item.context_expr)
+                if a and a in info.locks:
+                    for h in held + acquired:
+                        info.acq_edges.append((h, a, item.context_expr))
+                    acquired.append(a)
+            _record_stmt_effects(info, m, stmt, held, header_only=True)
+            _walk_method(info, m, stmt.body, held + acquired)
+            continue
+        _record_stmt_effects(info, m, stmt, held)
+        for attr in ("body", "orelse", "finalbody"):
+            inner = getattr(stmt, attr, None)
+            if inner:
+                _walk_method(info, m, inner, held)
+        for h in getattr(stmt, "handlers", []) or []:
+            _walk_method(info, m, h.body, held)
+
+
+def _record_stmt_effects(info: ClassInfo, m, stmt, held,
+                         header_only=False):
+    heldf = frozenset(held)
+
+    def record_target(t):
+        if isinstance(t, (ast.Tuple, ast.List)):
+            for e in t.elts:
+                record_target(e)
+            return
+        if isinstance(t, ast.Starred):
+            record_target(t.value)
+            return
+        attr = ""
+        if isinstance(t, ast.Attribute):
+            attr = _self_attr(t)
+        elif isinstance(t, ast.Subscript):
+            attr = _self_attr(t.value)
+        if attr and attr not in info.locks:
+            info.writes.append(WriteRec(attr, m.name, heldf, t))
+
+    if not header_only:
+        if isinstance(stmt, ast.Assign):
+            for t in stmt.targets:
+                record_target(t)
+        elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+            record_target(stmt.target)
+        elif isinstance(stmt, ast.Delete):
+            for t in stmt.targets:
+                record_target(t)
+
+    # expression-level effects: mutating calls, self-calls, Thread targets.
+    # For compound statements only the header expressions belong to this
+    # held-set; child bodies are walked separately.
+    exprs = []
+    if header_only:
+        exprs = [i.context_expr for i in stmt.items]
+    elif isinstance(stmt, (ast.If, ast.While)):
+        exprs = [stmt.test]
+    elif isinstance(stmt, ast.For):
+        exprs = [stmt.iter]
+    else:
+        exprs = [n for n in ast.iter_child_nodes(stmt)
+                 if isinstance(n, ast.expr)]
+        if isinstance(stmt, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+            exprs = [stmt.value] if stmt.value is not None else []
+            exprs += (stmt.targets if isinstance(stmt, ast.Assign)
+                      else [stmt.target])
+    for e in exprs:
+        for node in ast.walk(e):
+            if isinstance(node, ast.Lambda):
+                continue
+            if not isinstance(node, ast.Call):
+                continue
+            name = call_name(node) or ""
+            if name.split(".")[-1] in ("Thread",):
+                tgt = kw(node, "target")
+                t = _self_attr(tgt) if tgt is not None else ""
+                if t and "." not in t:
+                    info.thread_targets.add(t)
+            if isinstance(node.func, ast.Attribute):
+                if node.func.attr in MUTATORS:
+                    attr = _self_attr(node.func.value)
+                    if attr and attr not in info.locks:
+                        info.writes.append(
+                            WriteRec(attr, m.name, heldf, node))
+                base = dotted(node.func)
+                if base and base.startswith("self.") and \
+                        base.count(".") == 1:
+                    callee = base[5:]
+                    info.calls.setdefault(m.name, set()).add(callee)
+                    if held:
+                        info.held_calls.append((heldf, callee, node))
+            if isinstance(node.func, ast.Attribute) and \
+                    node.func.attr == "acquire":
+                a = _self_attr(node.func.value)
+                if a in info.locks:
+                    info.acquired_in.setdefault(m.name, set()).add(a)
+    # with-header acquisitions count as acquired-in for lock ordering
+    if header_only:
+        for item in stmt.items:
+            a = _self_attr(item.context_expr)
+            if a and a in info.locks:
+                info.acquired_in.setdefault(m.name, set()).add(a)
+
+
+def _closure(start: Set[str], calls: Dict[str, Set[str]],
+             universe: Set[str]) -> Set[str]:
+    seen = set()
+    frontier = [s for s in start if s in universe]
+    while frontier:
+        m = frontier.pop()
+        if m in seen:
+            continue
+        seen.add(m)
+        for c in calls.get(m, ()):
+            if c in universe and c not in seen:
+                frontier.append(c)
+    return seen
+
+
+# ---------------------------------------------------------------------------
+# RACE301 — inconsistent guarding
+# ---------------------------------------------------------------------------
+
+
+@register
+class InconsistentGuard(Rule):
+    """An attribute is written both under a lock and without it.
+
+    If ANY write site of ``self.attr`` takes ``with self._lock:``, the
+    lock is this attribute's guard — a write site that skips it races
+    every guarded one, and the guarded sites are paying for protection
+    they don't get. This is exactly the ``ParamStore.stats`` shape: most
+    counters bumped under ``self._cv``, one accumulated outside.
+
+    Detection: per class, writes to the same attribute partitioned by
+    their lexically-held ``with self.<lock>:`` set; a mix of guarded and
+    unguarded write sites flags every unguarded one. ``__init__`` is
+    exempt (pre-concurrency). Reads are not checked.
+
+    Fix: move the write under the established lock, or make the state
+    thread-local and merge under the lock.
+    """
+
+    id = "RACE301"
+    severity = SEV_ERROR
+    title = "attribute written both with and without its lock"
+    path_filters = RACE_PATHS
+
+    def check(self, ctx: ModuleCtx) -> List[Finding]:
+        findings: List[Finding] = []
+        for info in analyze_classes(ctx):
+            by_attr: Dict[str, List[WriteRec]] = {}
+            for w in info.writes:
+                if w.method == "__init__":
+                    continue
+                by_attr.setdefault(w.attr, []).append(w)
+            for attr, ws in sorted(by_attr.items()):
+                guarded = [w for w in ws if w.held]
+                bare = [w for w in ws if not w.held]
+                if not guarded or not bare:
+                    continue
+                locks = sorted({lk for w in guarded for lk in w.held})
+                gsite = min(guarded, key=lambda w: w.node.lineno)
+                for w in sorted(bare, key=lambda w: w.node.lineno):
+                    findings.append(ctx.finding(
+                        self, w.node,
+                        f"self.{attr} written without a lock in "
+                        f"{info.name}.{w.method} but under "
+                        f"self.{'/self.'.join(locks)} at line "
+                        f"{gsite.node.lineno} ({gsite.method})"))
+        return findings
+
+
+# ---------------------------------------------------------------------------
+# RACE302 — dual-thread-domain unguarded writes
+# ---------------------------------------------------------------------------
+
+
+@register
+class DualDomainWrite(Rule):
+    """An attribute is written from both thread domains with no common
+    lock.
+
+    A class that spawns ``threading.Thread(target=self.m)`` has two
+    execution domains: the spawned thread (everything reachable from its
+    targets) and the caller side (everything reachable from the remaining
+    methods). An attribute written in BOTH domains needs one lock held at
+    every write; torn counters and lost updates otherwise — the trainer's
+    collect cursor and its rollout PRNG key were exactly this.
+
+    Detection: per class with ``Thread(target=self.m)`` anywhere, the
+    intra-class call graph partitions methods into the spawned-thread
+    closure and the closure of the remaining entry points. Attributes
+    written (``__init__`` exempt) in both closures are flagged unless one
+    lock is held at every write site. Attributes already flagged by
+    RACE301 (mixed guarded/unguarded) are not re-flagged.
+
+    Fix: hold one lock (the class's existing condition variable counts)
+    at every write site of the shared attribute.
+    """
+
+    id = "RACE302"
+    severity = SEV_ERROR
+    title = "attribute written from both thread domains without a lock"
+    path_filters = RACE_PATHS
+
+    def check(self, ctx: ModuleCtx) -> List[Finding]:
+        findings: List[Finding] = []
+        for info in analyze_classes(ctx):
+            if not info.thread_targets:
+                continue
+            producer = _closure(set(info.thread_targets), info.calls,
+                                info.methods)
+            entry = info.methods - producer - {"__init__"}
+            consumer = _closure(entry, info.calls, info.methods)
+            by_attr: Dict[str, List[WriteRec]] = {}
+            for w in info.writes:
+                if w.method == "__init__":
+                    continue
+                by_attr.setdefault(w.attr, []).append(w)
+            for attr, ws in sorted(by_attr.items()):
+                guarded = [w for w in ws if w.held]
+                bare = [w for w in ws if not w.held]
+                if guarded and bare:
+                    continue             # RACE301's finding
+                pw = [w for w in ws if w.method in producer]
+                cw = [w for w in ws if w.method in consumer]
+                if not pw or not cw:
+                    continue
+                common = frozenset.intersection(*[w.held for w in ws])
+                if common:
+                    continue
+                p0 = min(pw, key=lambda w: w.node.lineno)
+                c0 = min(cw, key=lambda w: w.node.lineno)
+                site = min(ws, key=lambda w: w.node.lineno)
+                findings.append(ctx.finding(
+                    self, site.node,
+                    f"self.{attr} is written from the spawned-thread "
+                    f"domain ({info.name}.{p0.method}, line "
+                    f"{p0.node.lineno}) and the caller domain "
+                    f"({info.name}.{c0.method}, line {c0.node.lineno}) "
+                    "with no common lock held at every write"))
+        return findings
+
+
+# ---------------------------------------------------------------------------
+# RACE303 — lock-order inversion
+# ---------------------------------------------------------------------------
+
+
+@register
+class LockOrderInversion(Rule):
+    """Two locks are acquired in opposite orders on different paths.
+
+    Thread 1 holds A and waits for B while thread 2 holds B and waits for
+    A: classic deadlock, and invisible in tests until the unlucky
+    interleaving. Acquisition order must be a partial order.
+
+    Detection: per class, an edge A->B is recorded when ``with self.B:``
+    is entered while ``self.A`` is held, including through one level of
+    intra-class calls (calling ``self.m()`` while holding A, where ``m``
+    acquires B). A cycle in the edge graph flags the acquisition closing
+    it.
+
+    Fix: pick one global acquisition order and restructure the inner
+    acquisition out of the outer critical section.
+    """
+
+    id = "RACE303"
+    severity = SEV_ERROR
+    title = "lock acquisition order inversion"
+    path_filters = RACE_PATHS
+
+    def check(self, ctx: ModuleCtx) -> List[Finding]:
+        findings: List[Finding] = []
+        for info in analyze_classes(ctx):
+            edges: Dict[Tuple[str, str], ast.AST] = {}
+            for a, b, node in info.acq_edges:
+                if a != b:
+                    edges.setdefault((a, b), node)
+            # one level of call-mediated acquisition
+            closure_acq: Dict[str, Set[str]] = {}
+            for m in info.methods:
+                closure_acq[m] = set()
+                for callee in _closure({m}, info.calls, info.methods):
+                    closure_acq[m] |= info.acquired_in.get(callee, set())
+            for heldf, callee, node in info.held_calls:
+                for b in closure_acq.get(callee, ()):
+                    for a in heldf:
+                        if a != b:
+                            edges.setdefault((a, b), node)
+            graph: Dict[str, Set[str]] = {}
+            for (a, b) in edges:
+                graph.setdefault(a, set()).add(b)
+            reported = set()
+            for (a, b), node in sorted(edges.items(),
+                                       key=lambda e: e[1].lineno):
+                if frozenset((a, b)) in reported:
+                    continue
+                if self._reaches(graph, b, a):
+                    reported.add(frozenset((a, b)))
+                    findings.append(ctx.finding(
+                        self, node,
+                        f"lock order inversion in {info.name}: "
+                        f"self.{a} -> self.{b} here, but self.{b} -> "
+                        f"self.{a} on another path — deadlock risk"))
+        return findings
+
+    def _reaches(self, graph, src, dst) -> bool:
+        seen, frontier = set(), [src]
+        while frontier:
+            n = frontier.pop()
+            if n == dst:
+                return True
+            if n in seen:
+                continue
+            seen.add(n)
+            frontier.extend(graph.get(n, ()))
+        return False

@@ -254,17 +254,21 @@ class CoPRISTrainer:
         self._trained_batches = 0             # consumed collects
         # store totals already reported, so step metrics emit per-step
         # deltas (summable across a run like every sibling *_time field)
-        self._reported_dropped = self.param_store.stats["dropped"]
-        self._reported_reshard_time = self.param_store.stats["reshard_time"]
+        ps_stats = self.param_store.stats_snapshot()
+        self._reported_dropped = ps_stats["dropped"]
+        self._reported_reshard_time = ps_stats["reshard_time"]
         self._stop = threading.Event()
         self._closed = False
 
     # ------------------------------------------------------------------
     # rollout production (caller thread when sequential, producer thread
-    # when overlapped — never both, so self.key stays single-owner)
+    # when overlapped — never both in a given mode, but evaluate() splits
+    # the key from the consumer while a producer may be mid-collect, so
+    # the split-and-advance is guarded)
     # ------------------------------------------------------------------
     def _next_rollout_key(self):
-        self.key, k = jax.random.split(self.key)
+        with self._progress:
+            self.key, k = jax.random.split(self.key)
         return k
 
     def _collect_stage(self, params, version: int, idx: int) -> _StageBatch:
@@ -278,11 +282,11 @@ class CoPRISTrainer:
     def _producer_loop(self):
         try:
             while not self._stop.is_set():
-                idx = self._collect_idx
                 # staleness gate: collect ``idx`` trains as the ``idx``-th
                 # consumed batch, so its params snapshot may lag the
                 # training stage by at most max_staleness updates
                 with self._progress:
+                    idx = self._collect_idx
                     while (self._trained_batches < idx - self.max_staleness
                            and not self._stop.is_set()):
                         self._progress.wait(timeout=0.1)
@@ -292,7 +296,8 @@ class CoPRISTrainer:
                 # disaggregated) — never a superseded one
                 params, version = self.param_store.acquire()
                 item = self._collect_stage(params, version, idx)
-                self._collect_idx = idx + 1
+                with self._progress:
+                    self._collect_idx = idx + 1
                 while not self._stop.is_set():
                     try:
                         self._batches.put(item, timeout=0.1)
@@ -343,8 +348,11 @@ class CoPRISTrainer:
             # version — identical to (self.params, self.stage) here, since
             # the sequential consumer is the only publisher
             params, version = self.param_store.acquire()
-            item = self._collect_stage(params, version, self._collect_idx)
-            self._collect_idx += 1
+            with self._progress:
+                idx = self._collect_idx
+            item = self._collect_stage(params, version, idx)
+            with self._progress:
+                self._collect_idx += 1
         t_collected = time.perf_counter()
         out = self._train_on(item, t0, t_collected)
         self.history.append(out)
@@ -405,6 +413,10 @@ class CoPRISTrainer:
         off_tokens = int((gaps > 0).sum())
 
         out = {k: float(v) for k, v in metrics.items()}
+        # ONE consistent counter snapshot for both the reported deltas and
+        # the new reported totals — reading the live dict twice could lose
+        # a concurrent publish's increment between the reads
+        ps_stats = self.param_store.stats_snapshot()
         rollout_time = roll_stats["wall_time"]
         update_time = t_end - t_reward
         reward_time = self.reward_worker.last_gather_time
@@ -453,16 +465,16 @@ class CoPRISTrainer:
             # (versions held is a gauge; dropped/reshard are THIS step's)
             concurrency_target=roll_stats["concurrency_target"],
             param_store_versions=self.param_store.num_versions,
-            dropped_versions=(self.param_store.stats["dropped"]
+            dropped_versions=(ps_stats["dropped"]
                               - self._reported_dropped),
-            reshard_time=(self.param_store.stats["reshard_time"]
+            reshard_time=(ps_stats["reshard_time"]
                           - self._reported_reshard_time),
             mean_resp_len=float(np.mean([len(t.response_tokens)
                                          for g in groups
                                          for t in g.trajectories])),
         )
-        self._reported_dropped = self.param_store.stats["dropped"]
-        self._reported_reshard_time = self.param_store.stats["reshard_time"]
+        self._reported_dropped = ps_stats["dropped"]
+        self._reported_reshard_time = ps_stats["reshard_time"]
         self.last_groups = groups
         self.last_batch = batch
         return out

@@ -124,6 +124,10 @@ class RolloutEngine:
         self.slots: List[Optional[Trajectory]] = [None] * self.pool
         self._group_counter = 0
         self.stats_total = {}
+        # guards stats_total: _end_stage accumulates on whichever thread
+        # drives the stage (the overlapped trainer's producer), while
+        # consumer-side code reads totals via stats_snapshot()
+        self._stats_lock = threading.Lock()
         # the engine OWNS its donated KV cache: _decode_chunk/_prefill_batch
         # donate it, so a second concurrent collect would consume a buffer
         # the first one already invalidated. The overlapped trainer drives
@@ -208,6 +212,13 @@ class RolloutEngine:
     @cache.setter
     def cache(self, value):
         self.backend.cache = value
+
+    def stats_snapshot(self) -> dict:
+        """Consistent copy of the lifetime stat totals. Cross-thread
+        readers (the consumer, while the producer collects) use this
+        instead of reaching into ``stats_total``."""
+        with self._stats_lock:
+            return dict(self.stats_total)
 
     # ------------------------------------------------------------------
     def _media_for(self, batch):
@@ -702,6 +713,9 @@ class RolloutEngine:
             self.buffer.add_group(g)
 
         st = self._stats
+        # the last decode chunk's cache update may still be dispatching —
+        # force completion so wall_time covers compute, not enqueueing
+        jax.block_until_ready(self.cache)
         st["wall_time"] = time.perf_counter() - t0
         st["concurrency_target"] = sched.target_concurrency
         st["buffer_unfinished"] = self.buffer.num_unfinished
@@ -729,7 +743,8 @@ class RolloutEngine:
         st["multi_stage_trajs"] = sum(1 for g in groups for t in g.trajectories
                                       if t.num_stages > 1)
         st["batch_trajs"] = n_traj
-        for k_, v in st.items():
-            if isinstance(v, (int, float)):
-                self.stats_total[k_] = self.stats_total.get(k_, 0) + v
+        with self._stats_lock:
+            for k_, v in st.items():
+                if isinstance(v, (int, float)):
+                    self.stats_total[k_] = self.stats_total.get(k_, 0) + v
         return groups, st

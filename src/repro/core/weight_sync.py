@@ -91,11 +91,15 @@ class ParamStore:
         (checkpoint restore swapping the weights behind an unchanged stage
         number); versions are otherwise strictly monotonic.
         """
+        reshard_dt = 0.0
         if self._reshard is not None:
             t0 = time.perf_counter()
             params = self._reshard(params)
-            self.stats["reshard_time"] += time.perf_counter() - t0
+            reshard_dt = time.perf_counter() - t0
         with self._cv:
+            # stats is shared with the rollout thread — every write holds
+            # _cv (the accumulation used to race acquire's counter bumps)
+            self.stats["reshard_time"] += reshard_dt
             latest = next(reversed(self._versions)) if self._versions else -1
             if version < latest or (version == latest and not replace):
                 raise ValueError(
@@ -121,6 +125,12 @@ class ParamStore:
             version = next(reversed(self._versions))
             self.stats["acquired"] += 1
             return self._versions[version], version
+
+    def stats_snapshot(self) -> dict:
+        """Consistent copy of the counters; cross-thread readers use this
+        instead of reaching into the (lock-guarded) ``stats`` dict."""
+        with self._cv:
+            return dict(self.stats)
 
     def get(self, version: int) -> Any:
         """A specific in-flight version (KeyError if already dropped)."""

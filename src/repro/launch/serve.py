@@ -16,6 +16,7 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import threading
 import time
 from collections import deque
 from typing import List, Optional, Sequence
@@ -62,6 +63,10 @@ class ServeEngine:
                  eos_id: int, params, key, media=None):
         assert ro_cfg.group_size == 1, "serving: one trajectory per request"
         assert ro_cfg.mode == "copris", "serving rides the refill scheduler"
+        # submit() may be called from a different thread than the step()
+        # driver (late submission mid-stage is the whole point): the lock
+        # guards the request queue, id counter, and stage-target bumps
+        self._lock = threading.Lock()
         self._queue = deque()          # (request_id, prompt) FIFO
         self._next_id = 0
         self._submitted = 0            # total requests ever submitted
@@ -76,22 +81,26 @@ class ServeEngine:
 
     # -- prompt source (engine callback) --------------------------------
     def _next_prompt(self):
-        if not self._queue:
-            return None                # decline: leave the slot idle
-        rid, prompt = self._queue.popleft()
+        with self._lock:
+            if not self._queue:
+                return None            # decline: leave the slot idle
+            rid, prompt = self._queue.popleft()
         return prompt, rid             # request id rides the answer field
 
     # -- public API ------------------------------------------------------
     def submit(self, req: GenerateRequest) -> int:
-        """Queue a request; returns its id. Admitted at the next step()."""
-        rid = req.request_id
-        if rid is None:
-            rid = self._next_id
-            self._next_id += 1
-        self._queue.append((rid, np.asarray(req.prompt, np.int32)))
-        self._submitted += 1
-        if self._sched is not None:
-            self._sched.target_batch += 1
+        """Queue a request; returns its id. Admitted at the next step().
+        Thread-safe: may be called while another thread drives step()."""
+        prompt = np.asarray(req.prompt, np.int32)
+        with self._lock:
+            rid = req.request_id
+            if rid is None:
+                rid = self._next_id
+                self._next_id += 1
+            self._queue.append((rid, prompt))
+            self._submitted += 1
+            if self._sched is not None:
+                self._sched.target_batch += 1
         return rid
 
     @property
@@ -109,8 +118,13 @@ class ServeEngine:
             # unconsumed completions resume from the engine buffer, so the
             # stage target is exactly the unserved request count
             self._harvested = 0
-            self._sched = self.eng.begin_stage(self._params, 0, self._key)
-            self._sched.target_batch = self.pending
+            sched = self.eng.begin_stage(self._params, 0, self._key)
+            with self._lock:
+                # publish the stage and seed its target atomically, so a
+                # concurrent submit() either lands in `pending` here or
+                # bumps target_batch itself — never both, never neither
+                self._sched = sched
+                self._sched.target_batch = self.pending
         else:
             self.eng.step_stage(self._params, self._key, admit_idle=True)
         done = self._sched.completed[self._harvested:]
@@ -147,7 +161,8 @@ class ServeEngine:
         del self._sched.completed[:]
         self._harvested = 0
         _, stats = self.eng.end_stage()
-        self._sched = None
+        with self._lock:
+            self._sched = None    # submits from here queue for a new stage
         return stats
 
     def _result(self, group) -> GenerateResult:

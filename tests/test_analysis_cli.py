@@ -1,0 +1,127 @@
+"""CLI, baseline, and self-scan tests for ``python -m repro.analysis``."""
+import json
+import textwrap
+from pathlib import Path
+
+from repro.analysis.baseline import load_baseline, split_findings
+from repro.analysis.cli import main, rules_markdown, run_paths
+from repro.analysis.core import all_rules
+
+ROOT = Path(__file__).resolve().parents[1]
+
+BAD_SNIPPET = textwrap.dedent("""
+    import jax
+
+    @jax.jit
+    def f(x):
+        return float(x.sum())
+""")
+
+
+def test_self_scan_zero_nonbaselined_findings(monkeypatch):
+    """The repo's own code must be clean: every finding fixed or baselined
+    with a justification."""
+    monkeypatch.chdir(ROOT)
+    report = run_paths(["src", "benchmarks", "examples"])
+    assert report.parse_errors == []
+    assert report.files_scanned > 50
+    baseline = load_baseline(str(ROOT / "analysis_baseline.json"))
+    new, old, stale = split_findings(report.findings, baseline)
+    assert new == [], [f"{f.location()} {f.rule} {f.message}" for f in new]
+    assert stale == [], "baseline entries with no matching finding"
+    for e in baseline.values():
+        assert "TODO" not in e["justification"], e
+
+
+def test_cli_exit_codes_and_injected_violation(tmp_path, monkeypatch, capsys):
+    monkeypatch.chdir(tmp_path)
+    mod = tmp_path / "src" / "repro" / "core" / "bad.py"
+    mod.parent.mkdir(parents=True)
+    mod.write_text(BAD_SNIPPET)
+    # injected violation -> exit 1 with the finding on stdout
+    assert main(["src", "--no-baseline"]) == 1
+    out = capsys.readouterr().out
+    assert "JAX101" in out and "bad.py" in out
+    # baseline it -> exit 0; second run of --write-baseline keeps entries
+    assert main(["src", "--write-baseline"]) == 0
+    capsys.readouterr()
+    assert main(["src"]) == 0
+    out = capsys.readouterr().out
+    assert "1 baselined" in out
+    # fixing the file makes the baseline entry stale but still exit 0
+    mod.write_text("def f(x):\n    return x\n")
+    assert main(["src"]) == 0
+    assert "stale baseline entry" in capsys.readouterr().out
+
+
+def test_cli_github_format_annotations(tmp_path, monkeypatch, capsys):
+    monkeypatch.chdir(tmp_path)
+    mod = tmp_path / "src" / "repro" / "core" / "bad.py"
+    mod.parent.mkdir(parents=True)
+    mod.write_text(BAD_SNIPPET)
+    assert main(["src", "--no-baseline", "--format=github"]) == 1
+    out = capsys.readouterr().out
+    assert "::error file=src/repro/core/bad.py,line=" in out
+    assert "title=JAX101" in out
+
+
+def test_cli_json_report_artifact(tmp_path, monkeypatch):
+    monkeypatch.chdir(tmp_path)
+    mod = tmp_path / "src" / "repro" / "core" / "bad.py"
+    mod.parent.mkdir(parents=True)
+    mod.write_text(BAD_SNIPPET)
+    rpt = tmp_path / "report.json"
+    assert main(["src", "--no-baseline", "--format=github",
+                 "--output", str(rpt)]) == 1
+    data = json.loads(rpt.read_text())
+    assert data["new"] and data["new"][0]["rule"] == "JAX101"
+    assert data["files_scanned"] == 1
+
+
+def test_cli_select_and_ignore(tmp_path, monkeypatch):
+    monkeypatch.chdir(tmp_path)
+    mod = tmp_path / "src" / "repro" / "core" / "bad.py"
+    mod.parent.mkdir(parents=True)
+    mod.write_text(BAD_SNIPPET)
+    assert main(["src", "--no-baseline", "--select", "RACE"]) == 0
+    assert main(["src", "--no-baseline", "--ignore", "JAX"]) == 0
+    assert main(["src", "--no-baseline", "--select", "JAX101"]) == 1
+
+
+def test_cli_explain(capsys):
+    assert main(["--explain", "RACE301"]) == 0
+    out = capsys.readouterr().out
+    assert "RACE301" in out and "lock" in out
+    assert main(["--explain", "NOPE999"]) == 2
+
+
+def test_every_rule_has_id_severity_doc():
+    rules = all_rules()
+    assert len(rules) >= 11
+    for rid, cls in rules.items():
+        assert cls.id == rid and cls.severity in ("error", "warning")
+        assert cls.title and len(cls.doc()) > 80, rid
+
+
+def test_rules_md_doc_is_fresh():
+    """docs/analysis_rules.md is generated — regenerate on rule changes:
+    PYTHONPATH=src python -m repro.analysis --rules-md > docs/analysis_rules.md
+    """
+    generated = rules_markdown()
+    on_disk = (ROOT / "docs" / "analysis_rules.md").read_text()
+    assert on_disk == generated, "stale docs/analysis_rules.md (see docstring)"
+
+
+def test_fingerprints_stable_across_line_shifts(tmp_path, monkeypatch):
+    monkeypatch.chdir(tmp_path)
+    mod = tmp_path / "src" / "repro" / "core" / "bad.py"
+    mod.parent.mkdir(parents=True)
+    mod.write_text(BAD_SNIPPET)
+    fp1 = run_paths(["src"]).findings[0].fingerprint
+    mod.write_text("# shifted\n# down\n" + BAD_SNIPPET)
+    fp2 = run_paths(["src"]).findings[0].fingerprint
+    assert fp1 == fp2
+    # changing the flagged line itself DOES change the fingerprint
+    mod.write_text(BAD_SNIPPET.replace("x.sum()", "x.max()"))
+    fp3 = run_paths(["src"]).findings[0].fingerprint
+    assert fp3 != fp1

@@ -1,0 +1,148 @@
+"""Per-rule fixture tests for the pallaslint group (PAL2xx)."""
+import textwrap
+
+from repro.analysis.core import ModuleCtx, all_rules
+
+
+def findings(src, rule, path="src/repro/kernels/fam/ops.py"):
+    ctx = ModuleCtx(path, textwrap.dedent(src))
+    r = all_rules()[rule]()
+    assert r.applies_to(path)
+    return [f for f in r.check(ctx) if f.rule == rule]
+
+
+# ---------------------------------------------------------------------- 201
+def test_pal201_bad_missing_kernel_module():
+    rule = all_rules()["PAL201"]()
+    fs = rule.check_project([
+        "src/repro/kernels/foo/ref.py",
+        "src/repro/kernels/foo/ops.py",
+    ])
+    assert len(fs) == 1 and "foo.py" in fs[0].message
+
+
+def test_pal201_good_complete_family():
+    rule = all_rules()["PAL201"]()
+    assert rule.check_project([
+        "src/repro/kernels/foo/ref.py",
+        "src/repro/kernels/foo/ops.py",
+        "src/repro/kernels/foo/foo.py",
+        "src/repro/kernels/_compat.py",      # root files are exempt
+    ]) == []
+
+
+def test_pal201_does_not_run_outside_kernels():
+    assert not all_rules()["PAL201"]().applies_to("src/repro/core/x.py")
+
+
+# ---------------------------------------------------------------------- 202
+def test_pal202_bad_no_interpret_param():
+    src = """
+    import jax
+
+    def my_kernel(x):
+        return x
+    """
+    fs = findings(src, "PAL202")
+    assert len(fs) == 1 and "untestable on CPU" in fs[0].message
+
+
+def test_pal202_bad_interpret_never_defaulted():
+    src = """
+    import jax
+
+    def my_kernel(x, interpret=None):
+        return x
+    """
+    fs = findings(src, "PAL202")
+    assert len(fs) == 1 and "default_backend" in fs[0].message
+
+
+def test_pal202_good_inline_and_helper_resolution():
+    src = """
+    import jax
+
+    def _is_cpu():
+        return jax.default_backend() == "cpu"
+
+    def k1(x, interpret=None):
+        interp = (jax.default_backend() == "cpu") if interpret is None \\
+            else interpret
+        return x, interp
+
+    def k2(x, interpret=None):
+        interp = _is_cpu() if interpret is None else interpret
+        return x, interp
+    """
+    assert findings(src, "PAL202") == []
+
+
+def test_pal202_only_checks_ops_modules():
+    assert findings("def f(x):\n    return x\n", "PAL202",
+                    path="src/repro/kernels/fam/fam.py") == []
+
+
+# ---------------------------------------------------------------------- 203
+def test_pal203_bad_unchecked_floordiv_grid():
+    src = """
+    import jax.experimental.pallas as pl
+
+    def run(x, T, block):
+        return pl.pallas_call(None, grid=(T // block,))(x)
+    """
+    fs = findings(src, "PAL203", path="src/repro/kernels/fam/fam.py")
+    assert len(fs) == 1 and "ragged tail" in fs[0].message
+
+
+def test_pal203_good_pad_idiom_and_assert():
+    src = """
+    import jax.experimental.pallas as pl
+    import jax.numpy as jnp
+
+    def padded(x, T, block):
+        p = (-T) % block
+        x = jnp.pad(x, ((0, p),))
+        n = (T + p) // block
+        return pl.pallas_call(None, grid=(n,))(x)
+
+    def asserted(x, T, block):
+        assert T % block == 0
+        return pl.pallas_call(None, grid=(T // block,))(x)
+    """
+    assert findings(src, "PAL203", path="src/repro/kernels/fam/fam.py") == []
+
+
+# ---------------------------------------------------------------------- 204
+def test_pal204_bad_impure_index_map():
+    src = """
+    import jax.experimental.pallas as pl
+
+    STATE = {}
+
+    def bad_map(g, pi):
+        STATE["g"] = g
+        return (lookup(g), 0)
+
+    def run(spec):
+        return pl.BlockSpec((1, 128), bad_map)
+    """
+    msgs = [f.message for f in findings(src, "PAL204",
+                                        path="src/repro/kernels/f/f.py")]
+    assert any("stores to" in m for m in msgs)
+    assert any("lookup" in m for m in msgs)
+
+
+def test_pal204_good_scalar_prefetch_walk():
+    # the paged_decode_attn block-table walk: pure jnp on grid indices
+    src = """
+    import jax.experimental.pallas as pl
+    import jax.numpy as jnp
+
+    def run(NP, KV):
+        spec = pl.BlockSpec(
+            (1, 1, 128),
+            index_map=lambda g, pi, bt_ref, len_ref:
+                (jnp.minimum(bt_ref[g // KV, pi], NP - 1), 0, 0))
+        return spec
+    """
+    assert findings(src, "PAL204", path="src/repro/kernels/f/f.py") == []

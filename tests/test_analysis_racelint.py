@@ -1,0 +1,249 @@
+"""Per-rule fixture tests for the racelint group (RACE3xx)."""
+import textwrap
+
+from repro.analysis.core import ModuleCtx, all_rules
+
+
+def findings(src, rule, path="src/repro/core/mod.py"):
+    ctx = ModuleCtx(path, textwrap.dedent(src))
+    r = all_rules()[rule]()
+    assert r.applies_to(path)
+    return [f for f in r.check(ctx) if f.rule == rule]
+
+
+# ---------------------------------------------------------------------- 301
+def test_race301_bad_mixed_guarding():
+    # the ParamStore.stats shape: one counter bump outside the lock
+    src = """
+    import threading
+
+    class Store:
+        def __init__(self):
+            self._cv = threading.Condition()
+            self.stats = {}
+
+        def publish(self):
+            self.stats["reshard_time"] = 1.0     # unguarded
+            with self._cv:
+                self.stats["published"] = 2
+
+        def acquire(self):
+            with self._cv:
+                self.stats["acquired"] = 3
+    """
+    fs = findings(src, "RACE301")
+    assert len(fs) == 1
+    assert "self.stats" in fs[0].message and "_cv" in fs[0].message
+    assert fs[0].context == "Store.publish"
+
+
+def test_race301_good_consistent_guarding_and_init_exempt():
+    src = """
+    import threading
+
+    class Store:
+        def __init__(self):
+            self._cv = threading.Condition()
+            self.stats = {}                      # __init__ is exempt
+
+        def publish(self):
+            with self._cv:
+                self.stats["published"] = 2
+                self.stats.update(x=1)
+
+        def acquire(self):
+            with self._cv:
+                self.stats["acquired"] = 3
+    """
+    assert findings(src, "RACE301") == []
+
+
+def test_race301_mutating_calls_count_as_writes():
+    src = """
+    import threading
+
+    class Q:
+        def __init__(self):
+            self._lock = threading.Lock()
+            self._queue = []
+
+        def put(self, x):
+            with self._lock:
+                self._queue.append(x)
+
+        def drop(self):
+            self._queue.pop()                    # unguarded mutation
+    """
+    fs = findings(src, "RACE301")
+    assert len(fs) == 1 and "self._queue" in fs[0].message
+
+
+# ---------------------------------------------------------------------- 302
+def test_race302_bad_dual_domain_unguarded():
+    # the trainer-collect-cursor shape: written by the spawned thread's
+    # loop and by the caller-side step(), no lock anywhere
+    src = """
+    import threading
+
+    class Trainer:
+        def __init__(self):
+            self._lock = threading.Lock()
+            self._idx = 0
+
+        def start(self):
+            t = threading.Thread(target=self._loop)
+            t.start()
+
+        def _loop(self):
+            self._idx = self._idx + 1
+
+        def step(self):
+            self._idx += 1
+    """
+    fs = findings(src, "RACE302")
+    assert len(fs) == 1
+    assert "self._idx" in fs[0].message
+    assert "_loop" in fs[0].message and "step" in fs[0].message
+
+
+def test_race302_good_common_lock_everywhere():
+    src = """
+    import threading
+
+    class Trainer:
+        def __init__(self):
+            self._lock = threading.Lock()
+            self._idx = 0
+
+        def start(self):
+            t = threading.Thread(target=self._loop)
+            t.start()
+
+        def _loop(self):
+            with self._lock:
+                self._idx = self._idx + 1
+
+        def step(self):
+            with self._lock:
+                self._idx += 1
+    """
+    assert findings(src, "RACE302") == []
+
+
+def test_race302_single_domain_write_is_fine():
+    src = """
+    import threading
+
+    class Trainer:
+        def start(self):
+            threading.Thread(target=self._loop).start()
+
+        def _loop(self):
+            self._n = 1           # only the spawned thread writes
+
+        def report(self):
+            return self._n        # reads are exempt
+    """
+    assert findings(src, "RACE302") == []
+
+
+def test_race302_reaches_through_shared_helpers():
+    # a helper called from BOTH the thread target and a caller-side method
+    # puts its writes in both domains
+    src = """
+    import threading
+
+    class Trainer:
+        def start(self):
+            threading.Thread(target=self._loop).start()
+
+        def _loop(self):
+            self._advance()
+
+        def _advance(self):
+            self.key = self.key + 1
+
+        def evaluate(self):
+            self._advance()
+    """
+    fs = findings(src, "RACE302")
+    assert len(fs) == 1 and "self.key" in fs[0].message
+
+
+# ---------------------------------------------------------------------- 303
+def test_race303_bad_inverted_order():
+    src = """
+    import threading
+
+    class M:
+        def __init__(self):
+            self._a = threading.Lock()
+            self._b = threading.Lock()
+
+        def one(self):
+            with self._a:
+                with self._b:
+                    pass
+
+        def two(self):
+            with self._b:
+                with self._a:
+                    pass
+    """
+    fs = findings(src, "RACE303")
+    assert len(fs) == 1 and "inversion" in fs[0].message
+
+
+def test_race303_bad_inversion_through_call():
+    src = """
+    import threading
+
+    class M:
+        def __init__(self):
+            self._a = threading.Lock()
+            self._b = threading.Lock()
+
+        def one(self):
+            with self._a:
+                self._inner()
+
+        def _inner(self):
+            with self._b:
+                pass
+
+        def two(self):
+            with self._b:
+                with self._a:
+                    pass
+    """
+    fs = findings(src, "RACE303")
+    assert len(fs) == 1
+
+
+def test_race303_good_consistent_order():
+    src = """
+    import threading
+
+    class M:
+        def __init__(self):
+            self._a = threading.Lock()
+            self._b = threading.Lock()
+
+        def one(self):
+            with self._a:
+                with self._b:
+                    pass
+
+        def two(self):
+            with self._a:
+                with self._b:
+                    pass
+    """
+    assert findings(src, "RACE303") == []
+
+
+def test_racelint_scoped_to_core_and_serve():
+    r = all_rules()["RACE301"]()
+    assert r.applies_to("src/repro/core/rollout.py")
+    assert r.applies_to("src/repro/launch/serve.py")
+    assert not r.applies_to("src/repro/models/attention.py")
