@@ -8,16 +8,49 @@ regressions show up as an artifact diff rather than a silent drift.
 
     PYTHONPATH=src python -m benchmarks.bench_artifact --out BENCH_paged_kv.json
 
+With ``--sim-json sim_smoke.json`` the rollout-simulator smoke rows (written
+by ``benchmarks/sim.py --json``) are folded into the blob, and the artifact
+also times the static analyzer itself (full AST scan + the PAL205 interval
+analysis) in subprocesses so analyzer-runtime regressions show up in the
+same diff.
+
 Exits nonzero if a kernel interpret-mode correctness check FAILs (timing
 ratios are recorded but never gate CI — container CPUs are too noisy)."""
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import platform
+import subprocess
 import sys
+import time
 
 import jax
+
+
+def _timed_analysis(args_list) -> dict:
+    """Run ``python -m repro.analysis <args>`` in a subprocess, return
+    wall seconds + exit code. Runtime is recorded, never gated — the
+    analysis/ir-lint CI jobs own the gating."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src" + os.pathsep + env.get("PYTHONPATH", "")
+    t0 = time.perf_counter()
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *args_list],
+        capture_output=True, text=True, env=env)
+    return {"args": args_list,
+            "wall_s": round(time.perf_counter() - t0, 3),
+            "returncode": proc.returncode}
+
+
+def analyzer_runtime_rows() -> dict:
+    return {
+        "ast_full_scan": _timed_analysis(["--format=json"]),
+        "irlint_pal205": _timed_analysis(
+            ["--ir", "--select", "PAL205", "--no-baseline",
+             "--format=json"]),
+    }
 
 
 def collect() -> dict:
@@ -53,13 +86,22 @@ def collect() -> dict:
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="BENCH_paged_kv.json")
+    ap.add_argument("--sim-json", default=None, metavar="PATH",
+                    help="fold the sim.py --json smoke rows into the blob "
+                         "and record analyzer runtimes")
     args = ap.parse_args(argv)
     blob = collect()
+    if args.sim_json:
+        with open(args.sim_json) as f:
+            blob["sim_smoke"] = json.load(f).get("rows", [])
+        blob["analyzer_runtime"] = analyzer_runtime_rows()
     with open(args.out, "w") as f:
         json.dump(blob, f, indent=1)
     print(f"wrote {args.out}")
     for k, v in blob["paged_vs_dense"].items():
         print(f"  {k}: {v:.2f}")
+    for k, v in blob.get("analyzer_runtime", {}).items():
+        print(f"  {k}: {v['wall_s']}s (rc {v['returncode']})")
     bad = [n for n, ok in blob["checks"].items() if not ok]
     if bad:
         print(f"FAILED correctness checks: {bad}", file=sys.stderr)

@@ -50,9 +50,12 @@ def split_findings(findings: List[Finding], baseline: Dict[str, dict],
 
 
 def write_baseline(findings: List[Finding], path: str,
-                   existing: Dict[str, dict]) -> int:
+                   existing: Dict[str, dict]) -> Tuple[int, int]:
     """Write a baseline covering every current finding, preserving
-    justifications already present. Returns the entry count."""
+    justifications already present. Stale ``existing`` entries (no
+    matching current finding) are pruned in place — the file never keeps
+    grandfather rows for hazards that no longer exist. Returns
+    ``(entry_count, pruned_count)``."""
     entries = []
     for f in sorted(findings, key=lambda f: (f.path, f.rule, f.line)):
         prev = existing.get(f.fingerprint, {})
@@ -76,4 +79,6 @@ def write_baseline(findings: List[Finding], path: str,
     with open(path, "w", encoding="utf-8") as fh:
         json.dump(doc, fh, indent=2, sort_keys=False)
         fh.write("\n")
-    return len(entries)
+    current = {f.fingerprint for f in findings}
+    pruned = sum(1 for fp in existing if fp not in current)
+    return len(entries), pruned

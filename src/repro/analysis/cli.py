@@ -1,13 +1,26 @@
 """``python -m repro.analysis`` / ``repro-analysis`` — run the analyzer.
 
-Exit codes: 0 = clean (no findings outside the baseline), 1 = new
-findings or unparsable files, 2 = usage error (argparse).
+Modes:
+
+* default — the pure-AST pass over ``src benchmarks examples``;
+* ``--diff BASE`` — AST pass over only the files changed vs a git rev
+  (project-level rules still see the full file list);
+* ``--ir`` — the IR-level suite (IR4xx + PAL205): lowers the real hot
+  paths on fake-device meshes and checks donation aliasing, host
+  callbacks, collective budgets vs ``lowering_contracts.json``
+  (``--contracts``), and Pallas block bounds;
+* ``--write-contracts`` — measure the IR targets and (re)write the
+  lowering contract file.
+
+Exit codes: 0 = clean, 1 = new error-severity findings (any new finding
+under ``--strict``) or unparsable files, 2 = usage error (argparse).
 """
 from __future__ import annotations
 
 import argparse
 import json
 import os
+import subprocess
 import sys
 from dataclasses import asdict
 from typing import List, Optional
@@ -50,14 +63,23 @@ def _rel(path: str) -> str:
     return rp.replace(os.sep, "/")
 
 
-def run_paths(paths, select=None, ignore=None) -> ProjectReport:
-    """Scan ``paths`` (files or directories) with all registered rules."""
+def run_paths(paths, select=None, ignore=None,
+              project_paths=None) -> ProjectReport:
+    """Scan ``paths`` (files or directories) with all registered AST
+    rules (``requires_lowering`` rules only run under ``--ir``).
+    ``project_paths``: when scanning a subset (``--diff``), the full root
+    set whose file list project-level rules should see — otherwise
+    layout-contract rules would flag the unscanned remainder as missing.
+    """
     rules = [cls() for rid, cls in all_rules().items()
-             if (not select or any(rid.startswith(s) for s in select))
+             if not cls.requires_lowering
+             and (not select or any(rid.startswith(s) for s in select))
              and not (ignore and any(rid.startswith(s) for s in ignore))]
     report = ProjectReport()
     files = _iter_py_files(paths)
     relpaths = [_rel(f) for f in files]
+    project_relpaths = ([_rel(f) for f in _iter_py_files(project_paths)]
+                        if project_paths is not None else relpaths)
     for fpath, rpath in zip(files, relpaths):
         try:
             with open(fpath, "r", encoding="utf-8") as fh:
@@ -71,7 +93,7 @@ def run_paths(paths, select=None, ignore=None) -> ProjectReport:
             if rule.applies_to(rpath):
                 report.findings.extend(rule.check(ctx))
     for rule in rules:
-        report.findings.extend(rule.check_project(relpaths))
+        report.findings.extend(rule.check_project(project_relpaths))
     report.findings.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
     finalize_fingerprints(report.findings)
     return report
@@ -122,8 +144,11 @@ def _report_json(new, old, stale, report) -> dict:
 def rules_markdown() -> str:
     """The rule reference, generated from the rule docstrings."""
     groups = [("jaxlint (JAX1xx)", "JAX"),
-              ("pallaslint (PAL2xx)", "PAL"),
-              ("racelint (RACE3xx)", "RACE")]
+              ("pallaslint (PAL2xx, incl. the PAL205 interval analysis)",
+               "PAL"),
+              ("racelint (RACE3xx)", "RACE"),
+              ("irlint (IR4xx — lowered-program checks, `--ir` only)",
+               "IR")]
     lines = ["# repro.analysis rule reference",
              "",
              "Generated from the rule docstrings by "
@@ -157,6 +182,29 @@ def _explain(which: Optional[str], out) -> int:
 
 
 # ---------------------------------------------------------------------------
+# diff-aware mode
+# ---------------------------------------------------------------------------
+
+
+def changed_py_files(base: str, roots) -> List[str]:
+    """Working-tree ``.py`` files changed vs ``merge-base(base, HEAD)``,
+    restricted to the scanned roots. Deleted files are naturally excluded
+    (they no longer exist on disk)."""
+    try:
+        mb = subprocess.run(["git", "merge-base", base, "HEAD"],
+                            capture_output=True, text=True, check=True,
+                            ).stdout.strip()
+    except (subprocess.CalledProcessError, FileNotFoundError):
+        mb = base
+    out = subprocess.run(["git", "diff", "--name-only", "-z", mb, "--"],
+                         capture_output=True, text=True, check=True).stdout
+    prefixes = tuple(r.rstrip("/") + "/" for r in roots)
+    return [f for f in out.split("\0")
+            if f.endswith(".py") and os.path.isfile(f)
+            and (f.startswith(prefixes) or f.rstrip("/") in roots)]
+
+
+# ---------------------------------------------------------------------------
 # entry point
 # ---------------------------------------------------------------------------
 
@@ -185,6 +233,25 @@ def main(argv: Optional[List[str]] = None) -> int:
                     metavar="RULE", help="print rule documentation and exit")
     ap.add_argument("--rules-md", action="store_true",
                     help="print the generated markdown rule reference")
+    ap.add_argument("--diff", default=None, metavar="BASE",
+                    help="AST-scan only files changed vs this git rev "
+                         "(merge-base semantics)")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit 1 on ANY new finding; default gates only "
+                         "error severity")
+    ap.add_argument("--ir", action="store_true",
+                    help="run the IR-level suite (IR4xx + PAL205) instead "
+                         "of the AST pass — lowers the hot paths on "
+                         "fake-device meshes (fresh process required)")
+    ap.add_argument("--contracts", default="lowering_contracts.json",
+                    help="lowering contract file for IR404 "
+                         "(default: %(default)s)")
+    ap.add_argument("--write-contracts", action="store_true",
+                    help="measure the IR targets and (re)write the "
+                         "lowering contract file")
+    ap.add_argument("--ir-arch", default=None, metavar="ARCHS",
+                    help="comma-separated arch filter for the IR targets "
+                         "(e.g. 'tiny' — used by tests/CI shards)")
     args = ap.parse_args(argv)
 
     if args.rules_md:
@@ -193,18 +260,59 @@ def main(argv: Optional[List[str]] = None) -> int:
     if args.explain is not None:
         return _explain(args.explain, sys.stdout)
 
-    paths = args.paths or [p for p in DEFAULT_ROOTS if os.path.isdir(p)]
     select = args.select.split(",") if args.select else None
     ignore = args.ignore.split(",") if args.ignore else None
-    report = run_paths(paths, select=select, ignore=ignore)
+    archs = args.ir_arch.split(",") if args.ir_arch else None
+
+    if args.write_contracts:
+        from repro.analysis import contracts, irlint
+        measured = irlint.measure_all(archs=archs)
+        n = contracts.write_contracts(measured, args.contracts)
+        for mt in measured:
+            print(f"  {mt.key}: collectives "
+                  f"{mt.collectives.get('total', 0.0):.3e} B/device, "
+                  f"{sum(1 for d in mt.donated if d.aliased)}/"
+                  f"{len(mt.donated)} donated leaves aliased "
+                  f"(lower {mt.lower_s:.1f}s compile {mt.compile_s:.1f}s)")
+        print(f"wrote {n} contract entries to {args.contracts}")
+        return 0
+
+    if args.ir:
+        from repro.analysis import irlint
+        findings, scanned = irlint.run_ir(
+            select=select, ignore=ignore, contracts_path=args.contracts,
+            archs=archs)
+        findings.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
+        finalize_fingerprints(findings)
+        report = ProjectReport(findings=findings, files_scanned=scanned)
+    else:
+        paths = args.paths or [p for p in DEFAULT_ROOTS if os.path.isdir(p)]
+        project_paths = None
+        if args.diff is not None:
+            project_paths = paths
+            paths = changed_py_files(args.diff, paths)
+            if not paths:
+                print("no changed python files vs "
+                      f"{args.diff}; nothing to scan")
+                return 0
+        report = run_paths(paths, select=select, ignore=ignore,
+                           project_paths=project_paths)
 
     baseline = {} if args.no_baseline else load_baseline(args.baseline)
     if args.write_baseline:
-        n = write_baseline(report.findings, args.baseline, baseline)
-        print(f"wrote {n} entries to {args.baseline}")
+        n, pruned = write_baseline(report.findings, args.baseline, baseline)
+        print(f"wrote {n} entries to {args.baseline}"
+              + (f" (pruned {pruned} stale)" if pruned else ""))
         return 0
 
     new, old, stale = split_findings(report.findings, baseline)
+    # stale-entry notes are only meaningful when every rule ran over the
+    # requested files — a rule-subset run (--ir, --diff, --select/--ignore)
+    # trivially "misses" unrelated baselined findings
+    partial = (args.ir or args.diff is not None
+               or select is not None or ignore is not None)
+    if partial:
+        stale = []
     if args.output:
         with open(args.output, "w", encoding="utf-8") as fh:
             json.dump(_report_json(new, old, stale, report), fh, indent=2)
@@ -219,4 +327,6 @@ def main(argv: Optional[List[str]] = None) -> int:
         _fmt_text(new, old, stale, report, sys.stdout)
     for err in report.parse_errors:
         print(f"parse error: {err}", file=sys.stderr)
-    return 1 if (new or report.parse_errors) else 0
+    gating = new if args.strict else [f for f in new
+                                      if f.severity == "error"]
+    return 1 if (gating or report.parse_errors) else 0

@@ -1,12 +1,17 @@
 """Rule registry, findings, and shared AST machinery for ``repro.analysis``.
 
-The analyzer is a pure-AST pass: no file it scans is ever imported, no JAX
-is loaded, and a full-repo run is sub-second — cheap enough to gate every
-PR. Three rule groups register here:
+The default analyzer is a pure-AST pass: no file it scans is ever
+imported, no JAX is loaded, and a full-repo run is sub-second — cheap
+enough to gate every PR. Four rule groups register here:
 
 * ``jaxlint``   (JAX1xx)  — host-sync / PRNG / donation / timing hazards;
 * ``pallaslint`` (PAL2xx) — the Pallas kernel-family contract;
-* ``racelint``  (RACE3xx) — lock discipline over the concurrent core.
+* ``racelint``  (RACE3xx) — lock discipline over the concurrent core;
+* ``irlint``    (IR4xx, PAL205) — IR-level checks on the *lowered* hot
+  paths (donation aliasing, host callbacks, collective budgets, Pallas
+  interval analysis). These set ``requires_lowering`` and only run under
+  ``repro-analysis --ir`` — they import JAX and lower real programs on
+  the fake-device mesh, so they are excluded from the AST pass.
 
 Every rule is a :class:`Rule` subclass with a stable ``id``, a
 ``severity``, and a docstring that IS its user-facing documentation
@@ -200,6 +205,10 @@ class Rule:
     #: which scanned files the rule runs on (substring match on the
     #: repo-relative path; empty = every file)
     path_filters: tuple = ()
+    #: True for IR-level rules (irlint): they analyze lowered/compiled
+    #: programs, not source text, and run only under ``--ir`` — the AST
+    #: pass skips them entirely (their ``check`` is a no-op).
+    requires_lowering: bool = False
 
     def applies_to(self, relpath: str) -> bool:
         if not self.path_filters:
@@ -230,7 +239,12 @@ def register(cls: Type[Rule]) -> Type[Rule]:
 
 def all_rules() -> Dict[str, Type[Rule]]:
     """id -> rule class, importing the rule groups on first use."""
-    from repro.analysis import jaxlint, pallaslint, racelint  # noqa: F401
+    from repro.analysis import (  # noqa: F401
+        irlint,
+        jaxlint,
+        pallaslint,
+        racelint,
+    )
     return dict(sorted(_REGISTRY.items()))
 
 

@@ -55,6 +55,18 @@ def _round_up(n, m):
     return -(-n // m) * m
 
 
+def prefill_pad_dims(lens, n_rows, n_pending):
+    """Static jit signature of one batched prefill: (padded seq len S,
+    padded row count nr, padded scatter count ns). Every raw batch inside
+    one (bucket, pow2-rows, pow2-pending) cell MUST map to the same triple
+    — this bounds compilation count at O(#buckets), and ``irlint`` IR401
+    lowers its recompilation-hazard check on this exact function."""
+    S = _round_up(max(lens), PREFILL_BUCKET)
+    nr = 1 << (n_rows - 1).bit_length()
+    ns = 1 << (n_pending - 1).bit_length()
+    return S, nr, ns
+
+
 def _fold_slot_keys(stage_key, gid, sidx):
     """(pool,) group ids + sample indices -> (pool, 2) per-trajectory keys."""
     k = jax.vmap(jax.random.fold_in, in_axes=(None, 0))(stage_key, gid)
@@ -398,9 +410,7 @@ class RolloutEngine:
                     row_of_gid[traj.group_id] = r
                 row_map.append(r)
                 primary.append(True)
-        S = _round_up(max(lens), PREFILL_BUCKET)
-        nr = 1 << (len(rows) - 1).bit_length()
-        ns = 1 << (len(pending) - 1).bit_length()
+        S, nr, ns = prefill_pad_dims(lens, len(rows), len(pending))
         tokens = np.zeros((nr, S), np.int32)
         lengths = np.ones(nr, np.int32)
         if paged:

@@ -133,6 +133,13 @@ def input_specs(cfg: ModelConfig, shape: InputShape, mesh, *,
         def prefill_step(params, tokens, lengths, cache, media=None):
             logits, cache = M.prefill(params, cfg, tokens, lengths, cache,
                                       media=media)
+            # pin the output cache to the declared (batch-sharded) cache
+            # layout: XLA otherwise propagates the head-sharded layout of
+            # the K/V projections to the output, which (a) silently
+            # un-aliases the donated input cache (full-size HBM copy,
+            # caught by irlint IR402) and (b) defers the reshard to the
+            # decode step that consumes the cache
+            cache = jax.lax.with_sharding_constraint(cache, c_sh)
             return logits, cache
 
         args = [params_bf16, sds((B, S), I32), sds((B,), I32), cache_shape]
@@ -214,17 +221,23 @@ def collective_bytes(hlo_text: str) -> dict:
 # ---------------------------------------------------------------------------
 
 
-def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
-            mesh=None, verbose: bool = True, cfg_override=None) -> dict:
-    cfg = cfg_override or get_config(arch)
-    # one-hot embedding partitions as a matmul under SPMD (no gather remat);
-    # select-based cache writes shard along the cache length dim;
-    # MoE uses the shard_map ragged all-to-all dispatch (hillclimb D final:
-    # 5.2x memory term, 3x collectives vs the auto-SPMD scatter)
+def dryrun_config(cfg: ModelConfig) -> ModelConfig:
+    """The production lowering variant of ``cfg``: one-hot embedding
+    partitions as a matmul under SPMD (no gather remat); select-based cache
+    writes shard along the cache length dim; MoE uses the shard_map ragged
+    all-to-all dispatch (hillclimb D final: 5.2x memory term, 3x
+    collectives vs the auto-SPMD scatter). ``repro.analysis.contracts``
+    lowers the same variant — what we dry-run is what we gate."""
     cfg = dataclasses.replace(cfg, embed_impl="onehot", cache_update="onehot")
     if cfg.moe is not None and cfg.moe.dispatch == "sparse":
         cfg = dataclasses.replace(
             cfg, moe=dataclasses.replace(cfg.moe, dispatch="shardmap"))
+    return cfg
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+            mesh=None, verbose: bool = True, cfg_override=None) -> dict:
+    cfg = dryrun_config(cfg_override or get_config(arch))
     shape = INPUT_SHAPES[shape_name]
     rec = {"arch": arch, "shape": shape_name,
            "mesh": "2x16x16" if multi_pod else "16x16", "status": "skip"}

@@ -427,9 +427,9 @@ def attention_block(params, cfg, x, positions, *, kind: str,
             v_cache = jnp.where(hit, v.astype(v_cache.dtype), v_cache)
         else:
             k_cache = jax.vmap(lambda c, t, i: jax.lax.dynamic_update_slice(
-                c, t, (i, 0, 0)))(k_cache, k, idx)
+                c, t, (i, 0, 0)))(k_cache, k.astype(k_cache.dtype), idx)
             v_cache = jax.vmap(lambda c, t, i: jax.lax.dynamic_update_slice(
-                c, t, (i, 0, 0)))(v_cache, v, idx)
+                c, t, (i, 0, 0)))(v_cache, v.astype(v_cache.dtype), idx)
         out = decode_attention(q, k_cache, v_cache, cache_len + 1,
                                window=window, attn_softcap=cap)
         new_kv = (k_cache, v_cache)

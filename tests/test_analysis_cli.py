@@ -1,10 +1,15 @@
 """CLI, baseline, and self-scan tests for ``python -m repro.analysis``."""
 import json
+import subprocess
 import textwrap
 from pathlib import Path
 
-from repro.analysis.baseline import load_baseline, split_findings
-from repro.analysis.cli import main, rules_markdown, run_paths
+from repro.analysis.baseline import (
+    load_baseline,
+    split_findings,
+    write_baseline,
+)
+from repro.analysis.cli import changed_py_files, main, rules_markdown, run_paths
 from repro.analysis.core import all_rules
 
 ROOT = Path(__file__).resolve().parents[1]
@@ -95,9 +100,99 @@ def test_cli_explain(capsys):
     assert main(["--explain", "NOPE999"]) == 2
 
 
+# a WARNING-severity finding (JAX102): same key used by two random calls
+WARN_SNIPPET = textwrap.dedent("""
+    import jax
+
+    def f(key):
+        a = jax.random.normal(key)
+        b = jax.random.uniform(key)
+        return a + b
+""")
+
+
+def test_strict_gates_warnings_default_does_not(tmp_path, monkeypatch,
+                                                capsys):
+    monkeypatch.chdir(tmp_path)
+    mod = tmp_path / "src" / "repro" / "core" / "warn.py"
+    mod.parent.mkdir(parents=True)
+    mod.write_text(WARN_SNIPPET)
+    # default gate: only error severity fails the run
+    assert main(["src", "--no-baseline"]) == 0
+    out = capsys.readouterr().out
+    assert "JAX102" in out and "warning" in out
+    # --strict: any new finding fails
+    assert main(["src", "--no-baseline", "--strict"]) == 1
+    # github annotations carry the severity through
+    assert main(["src", "--no-baseline", "--format=github"]) == 0
+    assert "::warning file=" in capsys.readouterr().out
+
+
+def test_write_baseline_prunes_stale_entries(tmp_path, monkeypatch, capsys):
+    monkeypatch.chdir(tmp_path)
+    bad1 = tmp_path / "src" / "repro" / "core" / "bad1.py"
+    bad1.parent.mkdir(parents=True)
+    bad1.write_text(BAD_SNIPPET)
+    bad2 = bad1.with_name("bad2.py")
+    bad2.write_text(BAD_SNIPPET)
+    assert main(["src", "--write-baseline"]) == 0
+    assert len(load_baseline("analysis_baseline.json")) == 2
+    # fix one file: rewriting must prune its now-stale entry in place
+    bad2.write_text("def f(x):\n    return x\n")
+    capsys.readouterr()
+    assert main(["src", "--write-baseline"]) == 0
+    assert "(pruned 1 stale)" in capsys.readouterr().out
+    entries = load_baseline("analysis_baseline.json")
+    assert len(entries) == 1
+    assert all(e["path"].endswith("bad1.py") for e in entries.values())
+
+
+def test_write_baseline_on_clean_repo_writes_empty_file(tmp_path,
+                                                        monkeypatch):
+    monkeypatch.chdir(tmp_path)
+    mod = tmp_path / "src" / "repro" / "core" / "ok.py"
+    mod.parent.mkdir(parents=True)
+    mod.write_text("def f(x):\n    return x\n")
+    n, pruned = write_baseline([], "analysis_baseline.json", {})
+    assert (n, pruned) == (0, 0)
+    assert load_baseline("analysis_baseline.json") == {}
+    assert main(["src"]) == 0
+
+
+def _git(cwd, *args):
+    subprocess.run(["git", *args], cwd=cwd, check=True,
+                   capture_output=True,
+                   env={"GIT_AUTHOR_NAME": "t", "GIT_AUTHOR_EMAIL": "t@t",
+                        "GIT_COMMITTER_NAME": "t", "GIT_COMMITTER_EMAIL":
+                        "t@t", "PATH": "/usr/bin:/bin:/usr/local/bin",
+                        "HOME": str(cwd)})
+
+
+def test_diff_mode_scans_only_changed_files(tmp_path, monkeypatch, capsys):
+    monkeypatch.chdir(tmp_path)
+    src = tmp_path / "src" / "repro" / "core"
+    src.mkdir(parents=True)
+    # committed file contains a violation; it must NOT gate a diff run
+    (src / "old.py").write_text(BAD_SNIPPET)
+    _git(tmp_path, "init", "-q")
+    _git(tmp_path, "add", "-A")
+    _git(tmp_path, "commit", "-qm", "base")
+    assert changed_py_files("HEAD", ["src"]) == []
+    assert main(["--diff", "HEAD", "--no-baseline", "src"]) == 0
+    assert "nothing to scan" in capsys.readouterr().out
+    # a new bad file IS gated, the old one still is not
+    (src / "new.py").write_text(BAD_SNIPPET)
+    _git(tmp_path, "add", "-A")
+    assert changed_py_files("HEAD", ["src"]) == ["src/repro/core/new.py"]
+    assert main(["--diff", "HEAD", "--no-baseline", "src"]) == 1
+    out = capsys.readouterr().out
+    assert "new.py" in out and "old.py" not in out
+    assert "1 files scanned" in out
+
+
 def test_every_rule_has_id_severity_doc():
     rules = all_rules()
-    assert len(rules) >= 11
+    assert len(rules) >= 16
     for rid, cls in rules.items():
         assert cls.id == rid and cls.severity in ("error", "warning")
         assert cls.title and len(cls.doc()) > 80, rid

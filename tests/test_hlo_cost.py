@@ -1,0 +1,160 @@
+"""Unit tests for ``launch/hlo_cost.parse_hlo_cost`` on hand-written HLO.
+
+The walker is regex-based over ``compiled.as_text()`` output; these
+fixtures pin the exact text shapes it must keep parsing: entry headers,
+op lines, while loops with ``condition=``/``body=``, ``fusion``/``call``
+with ``calls=``, ``-start``/``-done`` collective pairs, and unknown
+dtypes.
+"""
+from repro.launch.hlo_cost import parse_hlo_cost
+
+DOT = """\
+ENTRY %main (p0: f32[8,16], p1: f32[16,32]) -> f32[8,32] {
+  %p0 = f32[8,16] parameter(0)
+  %p1 = f32[16,32] parameter(1)
+  ROOT %dot.1 = f32[8,32] dot(%p0, %p1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"""
+
+
+def test_basic_dot_flops_and_bytes():
+    c = parse_hlo_cost(DOT)
+    # 2 * prod(out 8x32) * contract 16
+    assert c["flops"] == 2 * 8 * 32 * 16
+    # dot reads both f32 operands and writes the output; parameters
+    # themselves are not separately charged
+    assert c["bytes"] == (8 * 32 + 8 * 16 + 16 * 32) * 4
+    assert c["collectives"]["total"] == 0
+
+
+WHILE = """\
+%cond (cp: (s32[], f32[4])) -> pred[] {
+  %cp = (s32[], f32[4]) parameter(0)
+  %gte.c = s32[] get-tuple-element(%cp), index=0
+  %limit = s32[] constant(12)
+  ROOT %lt = pred[] compare(%gte.c, %limit), direction=LT
+}
+
+%body (bp: (s32[], f32[4])) -> (s32[], f32[4]) {
+  %bp = (s32[], f32[4]) parameter(0)
+  %gte.0 = s32[] get-tuple-element(%bp), index=0
+  %gte.1 = f32[4] get-tuple-element(%bp), index=1
+  %one = s32[] constant(1)
+  %add.i = s32[] add(%gte.0, %one)
+  %add.x = f32[4] add(%gte.1, %gte.1)
+  ROOT %tup.b = (s32[], f32[4]) tuple(%add.i, %add.x)
+}
+
+ENTRY %main (p0: f32[4]) -> (s32[], f32[4]) {
+  %p0 = f32[4] parameter(0)
+  %zero = s32[] constant(0)
+  %tup.0 = (s32[], f32[4]) tuple(%zero, %p0)
+  ROOT %while.1 = (s32[], f32[4]) while(%tup.0), condition=%cond, body=%body
+}
+"""
+
+
+def test_while_trip_count_scales_bytes():
+    # per trip: add.i (4+4+4) + add.x (16+16+16) = 60 B
+    c12 = parse_hlo_cost(WHILE)
+    assert c12["bytes"] == 12 * 60
+    c24 = parse_hlo_cost(WHILE.replace("constant(12)", "constant(24)"))
+    assert c24["bytes"] == 2 * c12["bytes"]
+
+
+def test_while_without_condition_constant_defaults_to_one_trip():
+    degenerate = WHILE.replace("%limit = s32[] constant(12)",
+                               "%limit = s32[] copy(%gte.c)")
+    assert parse_hlo_cost(degenerate)["bytes"] == 60
+
+
+FUSION = """\
+%fused_dot (fp0: f32[8,16], fp1: f32[16,32]) -> f32[8,32] {
+  %fp0 = f32[8,16] parameter(0)
+  %fp1 = f32[16,32] parameter(1)
+  ROOT %dot.f = f32[8,32] dot(%fp0, %fp1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+
+%mid (mp0: f32[8,16], mp1: f32[16,32]) -> f32[8,32] {
+  %mp0 = f32[8,16] parameter(0)
+  %mp1 = f32[16,32] parameter(1)
+  ROOT %fusion.m = f32[8,32] fusion(%mp0, %mp1), kind=kLoop, calls=%fused_dot
+}
+
+ENTRY %main (p0: f32[8,16], p1: f32[16,32]) -> f32[8,32] {
+  %p0 = f32[8,16] parameter(0)
+  %p1 = f32[16,32] parameter(1)
+  ROOT %call.1 = f32[8,32] call(%p0, %p1), calls=%mid
+}
+"""
+
+
+def test_fusion_and_call_recursion_counts_flops_once():
+    c = parse_hlo_cost(FUSION)
+    # the dot is two call levels down and must be counted exactly once
+    assert c["flops"] == 2 * 8 * 32 * 16
+    # bytes are the entry-level call's own I/O, not the callee internals
+    assert c["bytes"] == (8 * 32 + 8 * 16 + 16 * 32) * 4
+
+
+COLLECTIVES = """\
+%agcond (cp: (s32[], f32[256])) -> pred[] {
+  %cp = (s32[], f32[256]) parameter(0)
+  %gte.c = s32[] get-tuple-element(%cp), index=0
+  %limit = s32[] constant(8)
+  ROOT %lt = pred[] compare(%gte.c, %limit), direction=LT
+}
+
+%agbody (bp: (s32[], f32[256])) -> (s32[], f32[256]) {
+  %bp = (s32[], f32[256]) parameter(0)
+  %gte.0 = s32[] get-tuple-element(%bp), index=0
+  %gte.1 = f32[256] get-tuple-element(%bp), index=1
+  %one = s32[] constant(1)
+  %add.i = s32[] add(%gte.0, %one)
+  %ag.b = f32[256] all-gather(%gte.1), dimensions={0}
+  ROOT %tup.b = (s32[], f32[256]) tuple(%add.i, %ag.b)
+}
+
+ENTRY %main (p0: f32[1024], p1: f32[256]) -> f32[1024] {
+  %p0 = f32[1024] parameter(0)
+  %p1 = f32[256] parameter(1)
+  %zero = s32[] constant(0)
+  %tup.0 = (s32[], f32[256]) tuple(%zero, %p1)
+  %loop = (s32[], f32[256]) while(%tup.0), condition=%agcond, body=%agbody
+  %ar-start.1 = f32[1024] all-reduce-start(%p0), replica_groups={}
+  ROOT %ar-done.1 = f32[1024] all-reduce-done(%ar-start.1)
+}
+"""
+
+
+def test_collective_accounting_start_done_and_loop_scaling():
+    c = parse_hlo_cost(COLLECTIVES)
+    coll = c["collectives"]
+    # async pair: counted at -start only, never double-counted at -done
+    assert coll["all-reduce"] == 1024 * 4
+    # all-gather inside the while body is scaled by the 8-trip count
+    assert coll["all-gather"] == 8 * 256 * 4
+    assert coll["total"] == coll["all-reduce"] + coll["all-gather"]
+    assert coll["reduce-scatter"] == 0
+
+
+UNKNOWN_DTYPE = """\
+ENTRY %main (p0: u4[64]) -> u4[64] {
+  %p0 = u4[64] parameter(0)
+  ROOT %neg.1 = u4[64] negate(%p0)
+}
+"""
+
+
+def test_unknown_dtype_falls_back_to_zero_bytes():
+    # u4 is not in the dtype table: the op must parse without crashing and
+    # contribute zero bytes rather than garbage
+    c = parse_hlo_cost(UNKNOWN_DTYPE)
+    assert c["bytes"] == 0
+    assert c["flops"] == 0
+
+
+def test_empty_module_is_harmless():
+    c = parse_hlo_cost("")
+    assert c["flops"] == 0 and c["bytes"] == 0
+    assert c["collectives"]["total"] == 0

@@ -1,0 +1,260 @@
+"""Tests for the IR-level lint suite (``repro.analysis.irlint``).
+
+The pure-Python checks (alias-map parsing, contract diffing, donation and
+callback checks) are unit-tested directly on synthetic inputs. The CLI
+gate is tested by INJECTING violations — a fabricated MeasuredTarget with
+an un-aliased donation (IR402), a doctored contract file (IR404), and a
+Pallas harness with an out-of-bounds index_map (PAL205) — each of which
+must exit 1. A subprocess integration test lowers the real tiny targets
+end-to-end (fresh process: the fake-device XLA flag must be set before
+JAX initialises).
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+from repro.analysis import cli, irlint
+from repro.analysis.irlint import (
+    DonatedLeaf,
+    MeasuredTarget,
+    aliased_params,
+    check_contract,
+    check_donation,
+    find_callback_prims,
+    parse_alias_map,
+)
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ---------------------------------------------------------------------------
+# unit: alias-map parsing
+# ---------------------------------------------------------------------------
+
+
+ALIAS_HLO = (
+    "HloModule jit_step, input_output_alias={ {0}: (2, {}, may-alias), "
+    "{1, 0}: (5, {}, must-alias) }, entry_computation_layout={...}\n"
+    "ENTRY %main () -> f32[] {\n}\n"
+)
+
+
+def test_parse_alias_map_nested_braces():
+    assert parse_alias_map(ALIAS_HLO) == [((0,), 2), ((1, 0), 5)]
+    assert aliased_params(ALIAS_HLO) == {2, 5}
+
+
+def test_parse_alias_map_missing_header_is_empty():
+    assert parse_alias_map("HloModule jit_step\nENTRY %main () {}\n") == []
+
+
+# ---------------------------------------------------------------------------
+# unit: contract diffing + donation check on synthetic targets
+# ---------------------------------------------------------------------------
+
+
+def _mt(**kw):
+    base = dict(key="tiny|decode_tiny|4x2", arch="tiny", shape="decode_tiny",
+                mesh="4x2", kind="decode", path="src/repro/launch/dryrun.py",
+                line=1, chips=8)
+    base.update(kw)
+    return MeasuredTarget(**base)
+
+
+def test_check_contract_missing_entry_is_error():
+    (f,) = check_contract(_mt(), {})
+    assert f.rule == "IR404" and f.severity == "error"
+    assert "no lowering contract" in f.message
+
+
+def test_check_contract_regression_error_improvement_warning():
+    entry = {"tiny|decode_tiny|4x2":
+             {"collective_bytes": {"all-gather": 1.0e6}}}
+    # regression beyond 2% -> error
+    (f,) = check_contract(_mt(collectives={"all-gather": 2.0e6}), entry)
+    assert f.severity == "error" and "regressed" in f.message
+    # improvement -> warning asking for a contract refresh
+    (f,) = check_contract(_mt(collectives={"all-gather": 0.5e6}), entry)
+    assert f.severity == "warning" and "refresh the contract" in f.message
+    # within tolerance -> clean
+    assert check_contract(_mt(collectives={"all-gather": 1.01e6}),
+                          entry) == []
+
+
+def test_check_donation_flags_large_unaliased_leaf_only():
+    mt = _mt(donated=[
+        DonatedLeaf("arg2['k']", 3, 1 << 20, "bfloat16", aliased=True),
+        DonatedLeaf("arg2['v']", 4, 1 << 20, "bfloat16", aliased=False),
+        DonatedLeaf("arg3['len']", 5, 8, "int32", aliased=False),
+    ])
+    (f,) = check_donation(mt)
+    assert f.rule == "IR402" and "arg2['v']" in f.message
+    assert "silent copy" in f.message
+
+
+def test_find_callback_prims_recurses_into_scan():
+    import jax
+    import jax.numpy as jnp
+
+    def step(x):
+        def body(c, t):
+            jax.debug.print("c={c}", c=c)
+            return c + t, c
+        return jax.lax.scan(body, x, jnp.arange(3.0))[0]
+
+    prims = find_callback_prims(jax.make_jaxpr(step)(1.0))
+    assert prims and all(p.startswith("debug") for p in prims)
+    assert find_callback_prims(
+        jax.make_jaxpr(lambda x: x * 2)(1.0)) == []
+
+
+# ---------------------------------------------------------------------------
+# injected violations must fail the CLI with exit 1
+# ---------------------------------------------------------------------------
+
+
+def test_injected_ir402_unaliased_donation_exits_1(tmp_path, monkeypatch,
+                                                  capsys):
+    monkeypatch.chdir(tmp_path)
+    bad = _mt(donated=[DonatedLeaf("arg2['k']", 3, 1 << 20, "bfloat16",
+                                   aliased=False)])
+    monkeypatch.setattr(irlint, "measure_all", lambda archs=None: [bad])
+    assert cli.main(["--ir", "--select", "IR402", "--no-baseline"]) == 1
+    assert "IR402" in capsys.readouterr().out
+    good = _mt(donated=[DonatedLeaf("arg2['k']", 3, 1 << 20, "bfloat16",
+                                    aliased=True)])
+    monkeypatch.setattr(irlint, "measure_all", lambda archs=None: [good])
+    assert cli.main(["--ir", "--select", "IR402", "--no-baseline"]) == 0
+
+
+def test_injected_ir403_callback_exits_1(tmp_path, monkeypatch, capsys):
+    monkeypatch.chdir(tmp_path)
+    bad = _mt(callbacks=["debug_callback", "debug_callback"])
+    monkeypatch.setattr(irlint, "measure_all", lambda archs=None: [bad])
+    assert cli.main(["--ir", "--select", "IR403", "--no-baseline"]) == 1
+    assert "debug_callback" in capsys.readouterr().out
+
+
+def test_injected_ir404_contract_regression_exits_1(tmp_path, monkeypatch,
+                                                    capsys):
+    monkeypatch.chdir(tmp_path)
+    mt = _mt(collectives={"all-gather": 2.0e6})
+    monkeypatch.setattr(irlint, "measure_all", lambda archs=None: [mt])
+    cpath = tmp_path / "contracts.json"
+    cpath.write_text(json.dumps({"entries": {
+        mt.key: {"collective_bytes": {"all-gather": 1.0e6}}}}))
+    assert cli.main(["--ir", "--select", "IR404", "--no-baseline",
+                     "--contracts", str(cpath)]) == 1
+    assert "regressed" in capsys.readouterr().out
+    # an improvement is a warning: clean by default, gated under --strict
+    cpath.write_text(json.dumps({"entries": {
+        mt.key: {"collective_bytes": {"all-gather": 4.0e6}}}}))
+    assert cli.main(["--ir", "--select", "IR404", "--no-baseline",
+                     "--contracts", str(cpath)]) == 0
+    assert cli.main(["--ir", "--select", "IR404", "--no-baseline",
+                     "--strict", "--contracts", str(cpath)]) == 1
+
+
+def _oob_harness():
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+
+    x = jnp.zeros((32,), jnp.float32)
+    fn = pl.pallas_call(
+        lambda x_ref, o_ref: None,
+        grid=(4,),
+        in_specs=[pl.BlockSpec((8,), lambda i: (i + 1,))],   # off-by-one
+        out_specs=pl.BlockSpec((8,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((32,), jnp.float32))
+    fn(x)
+
+
+def test_injected_pal205_oob_index_map_exits_1(tmp_path, monkeypatch,
+                                               capsys):
+    monkeypatch.chdir(tmp_path)
+    monkeypatch.setattr(irlint, "HARNESSES", {"oob_family": _oob_harness})
+    assert cli.main(["--ir", "--select", "PAL205", "--no-baseline"]) == 1
+    out = capsys.readouterr().out
+    assert "out of bounds" in out and "oob_family" in out
+
+
+def test_injected_pal205_vmem_budget_exits_1(tmp_path, monkeypatch, capsys):
+    def fat_harness():
+        import jax
+        import jax.numpy as jnp
+        from jax.experimental import pallas as pl
+
+        x = jnp.zeros((4096, 4096), jnp.float32)     # 64 MiB block
+        fn = pl.pallas_call(
+            lambda x_ref, o_ref: None,
+            grid=(1,),
+            in_specs=[pl.BlockSpec((4096, 4096), lambda i: (0, 0))],
+            out_specs=pl.BlockSpec((4096, 4096), lambda i: (0, 0)),
+            out_shape=jax.ShapeDtypeStruct((4096, 4096), jnp.float32))
+        fn(x)
+
+    monkeypatch.chdir(tmp_path)
+    monkeypatch.setattr(irlint, "HARNESSES", {"fat_family": fat_harness})
+    assert cli.main(["--ir", "--select", "PAL205", "--no-baseline"]) == 1
+    assert "VMEM" in capsys.readouterr().out
+
+
+def test_real_kernel_harnesses_are_clean():
+    """The repo's own kernels must pass the interval analysis."""
+    findings = irlint.run_pallas_interval()
+    errors = [f for f in findings if f.severity == "error"]
+    assert errors == [], [f.message for f in errors]
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: lower the real tiny targets in a fresh process
+# ---------------------------------------------------------------------------
+
+
+def test_tiny_targets_end_to_end_contract_roundtrip(tmp_path):
+    code = textwrap.dedent("""
+        import json
+        from repro.analysis import contracts   # sets XLA_FLAGS pre-jax
+        from repro.analysis import cli, irlint
+
+        measured = irlint.measure_all(archs=["tiny"])
+        assert len(measured) == 4, [m.key for m in measured]
+        # every big donated leaf of every tiny target must be aliased
+        for mt in measured:
+            bad = [d.name for d in mt.donated
+                   if not d.aliased and d.nbytes >= irlint.MIN_ALIAS_BYTES]
+            assert bad == [], (mt.key, bad)
+        contracts.write_contracts(measured, "contracts.json")
+
+        rc_clean = cli.main(["--ir", "--select", "IR402,IR403,IR404",
+                             "--no-baseline", "--contracts",
+                             "contracts.json", "--ir-arch", "tiny"])
+        assert rc_clean == 0, rc_clean
+
+        data = json.load(open("contracts.json"))
+        for e in data["entries"].values():
+            e["collective_bytes"]["all-reduce"] = 1.0
+        json.dump(data, open("contracts.json", "w"))
+        rc_doctored = cli.main(["--ir", "--select", "IR404",
+                                "--no-baseline", "--contracts",
+                                "contracts.json", "--ir-arch", "tiny"])
+        assert rc_doctored == 1, rc_doctored
+        print("ROUNDTRIP_OK")
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    # fake host devices only exist on the CPU platform; leaving the
+    # platform unpinned lets JAX probe for accelerators first, which can
+    # stall for minutes on hosts with a partially-configured TPU runtime
+    env["JAX_PLATFORMS"] = "cpu"
+    # the tiny targets only need the 4x2 mesh: 8 fake devices, not the
+    # 512 contracts.py would otherwise default to
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    r = subprocess.run([sys.executable, "-c", code], env=env,
+                       cwd=str(tmp_path), capture_output=True, text=True,
+                       timeout=900)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "ROUNDTRIP_OK" in r.stdout
