@@ -78,6 +78,11 @@ class StepStats:
     resumed: int = 0
     thrash_steps: int = 0
     slot_utilization: float = 0.0
+    # multi-turn environments: host-side env.step calls, wall-clock the
+    # engine spent blocked on them, and observation tokens appended
+    env_steps: int = 0
+    env_stall_time: float = 0.0
+    env_tokens: int = 0
     # host<->device round-trips: chunked decode transfers once per
     # decode_chunk engine steps; refills are batched per boundary
     decode_syncs: int = 0
@@ -95,7 +100,7 @@ class StepStats:
     @property
     def step_time(self):
         return (self.rollout_time + self.prefill_time + self.logp_time
-                + self.train_time)
+                + self.train_time + self.env_stall_time)
 
 
 class RolloutSim:
@@ -253,6 +258,226 @@ class RolloutSim:
         self.stage += 1
         self._completed_groups = groups
         return st
+
+
+@dataclass
+class EnvModel:
+    """Host-side environment service model for multi-turn episodes."""
+    latency: float = 40.0        # wall-clock per env.step (no GPU work)
+    turns: int = 3               # model turns per episode
+    obs_len: int = 24            # observation tokens appended per turn
+    turn_mean_len: float = 600.0
+    turn_sigma: float = 0.6
+    prompt_len: int = 64
+
+    def turn_target(self, seed, traj, turn) -> int:
+        # deterministic per (group, sample, turn) so the serialized and
+        # overlapped runs simulate the SAME episode workload regardless of
+        # dispatch-order differences
+        rng = np.random.default_rng(
+            [seed, traj.group_id, traj.sample_idx, turn])
+        mu = np.log(self.turn_mean_len) - self.turn_sigma ** 2 / 2
+        return int(np.clip(rng.lognormal(mu, self.turn_sigma), 4, 4096))
+
+
+class MultiTurnSim:
+    """Multi-turn rollout under the real scheduler: each trajectory decodes
+    several model turns with a host-side environment step between them.
+
+    ``serialize_env=True`` is the naive driver — the engine blocks on
+    ``env.step`` inline, so every env call adds its full latency to the
+    stage wall while every slot sits idle. ``serialize_env=False`` is the
+    live engine's policy (core/rollout.py ``_stop_slot``/``_poll_env``):
+    the finished turn's slot is released back to continuous-batching
+    admission, the trajectory parks with ``awaiting_env`` (which
+    ``pop_resumable`` skips), and it rejoins the dispatch pool — paying
+    re-prefill of prompt + carried tokens — once its observation lands.
+    Env latency is only paid as wall when nothing else is decodable;
+    env steps still pending at stage end resolve during the train step
+    (the engine's cross-stage ``_env_pending`` carry)."""
+
+    def __init__(self, ro: RolloutConfig, cluster: ClusterModel,
+                 env: EnvModel, serialize_env: bool, seed: int = 0):
+        self.ro, self.cluster, self.env = ro, cluster, env
+        self.serialize = serialize_env
+        self.seed = seed
+        self.buffer = TrajectoryBuffer()
+        self._gid = 0
+        self._turns_done: dict = {}      # traj_id -> completed model turns
+        self.stage = 0
+
+    def _new_group(self) -> Group:
+        g = Group(group_id=self._gid,
+                  prompt_tokens=np.zeros(self.env.prompt_len, np.int32),
+                  answer=0, size=self.ro.group_size)
+        self._gid += 1
+        return g
+
+    def run_step(self) -> StepStats:
+        ro, cl, env = self.ro, self.cluster, self.env
+        st = StepStats()
+        sched = ConcurrencyScheduler(ro, self.buffer, self._new_group)
+        st.concurrency_target = sched.target_concurrency
+        pool = ro.slot_pool
+        slots: list = [None] * pool
+        grown = np.zeros(pool, np.int64)
+        target = np.zeros(pool, np.int64)
+        parked: list = []                # (ready_wall_time, trajectory)
+        wall = 0.0                       # rollout + prefill + env stalls
+        total_slot_steps = 0
+        active_slot_steps = 0
+
+        def refill(i):
+            t = sched.next_request()
+            if t is None:
+                slots[i] = None
+                return
+            slots[i] = t
+            carried = len(t.response_tokens)
+            if carried:
+                st.resumed += 1
+            grown[i] = 0
+            target[i] = env.turn_target(
+                self.seed, t, self._turns_done.get(t.traj_id, 0))
+            cost = cl.prefill_tok_rate * (env.prompt_len + carried)
+            st.prefill_time += cost
+            nonlocal wall
+            wall += cost
+
+        def poll(now):
+            # integrate landed observations / finished episodes (overlap
+            # mode only — serialized mode never parks)
+            nonlocal parked
+            still, finished = [], False
+            for ready, t in parked:
+                if ready > now:
+                    still.append((ready, t))
+                    continue
+                t.awaiting_env = False
+                if self._turns_done[t.traj_id] >= env.turns:
+                    t.done = True
+                    t.finish_reason = "env_done"
+                    finished = True
+                else:
+                    t.append_env([0] * env.obs_len, self.stage)
+                    st.env_tokens += env.obs_len
+                    # resumable again: next refill re-prefills it
+            parked = still
+            if finished:
+                sched.harvest()
+
+        for i in range(pool):
+            refill(i)
+        st.prefill_syncs += 1
+
+        while not sched.done:
+            if not self.serialize:
+                poll(wall)
+                for i in range(pool):
+                    if slots[i] is None:
+                        refill(i)
+            idx = [i for i in range(pool) if slots[i] is not None]
+            if not idx:
+                if not self.serialize and parked:
+                    # everything in flight is waiting on its environment:
+                    # block until the earliest observation lands
+                    ready = min(r for r, _ in parked)
+                    if ready > wall:
+                        st.env_stall_time += ready - wall
+                        wall = ready
+                    continue
+                break
+            n = len(idx)
+            cost = cl.t_fixed + cl.t_token * n + cl.t_quad * n * n
+            st.rollout_time += cost
+            wall += cost
+            st.decode_steps += 1
+            total_slot_steps += pool
+            active_slot_steps += n
+            st.generated_tokens += n
+            for i in idx:
+                grown[i] += 1
+                t = slots[i]
+                if grown[i] < target[i]:
+                    continue
+                # turn complete: materialise the model tokens, call the env
+                t.append_run([0] * int(grown[i]), [-1.0] * int(grown[i]),
+                             self.stage)
+                nturn = self._turns_done.get(t.traj_id, 0) + 1
+                self._turns_done[t.traj_id] = nturn
+                st.env_steps += 1
+                final = nturn >= env.turns
+                if self.serialize:
+                    # inline env.step: the whole engine stalls
+                    st.env_stall_time += env.latency
+                    wall += env.latency
+                    if final:
+                        t.done = True
+                        t.finish_reason = "env_done"
+                        sched.release(t)
+                        slots[i] = None
+                        sched.harvest()
+                        refill(i)
+                    else:
+                        t.append_env([0] * env.obs_len, self.stage)
+                        st.env_tokens += env.obs_len
+                        grown[i] = 0
+                        target[i] = env.turn_target(self.seed, t, nturn)
+                else:
+                    # live-engine policy: yield the slot, park on the env
+                    t.awaiting_env = True
+                    sched.release(t)
+                    slots[i] = None
+                    parked.append((wall + env.latency, t))
+                    refill(i)
+
+        # early termination: evict in-flight partial turns to the buffer
+        for i in range(pool):
+            t = slots[i]
+            if t is not None:
+                t.append_run([0] * int(grown[i]), [-1.0] * int(grown[i]),
+                             self.stage)
+                sched.release(t)
+                slots[i] = None
+                st.evicted += 1
+        # env steps still pending resolve during the train step (latency
+        # << train_time), mirroring the engine's cross-stage _env_pending
+        # carry — no wall cost
+        poll(float("inf"))
+        sched.harvest()
+
+        groups = sched.completed[: ro.batch_size]
+        for g in sched.completed[ro.batch_size:]:
+            self.buffer.add_group(g)
+        for g in groups:
+            for t in g.trajectories:
+                st.batch_tokens += len(t.stage_ids)
+                st.carried_tokens += sum(1 for s in t.stage_ids
+                                         if s != self.stage)
+        st.logp_time = cl.logp_tok_rate * st.carried_tokens
+        st.train_time = cl.train_time
+        st.slot_utilization = (active_slot_steps / total_slot_steps
+                               if total_slot_steps else 1.0)
+        st.decode_syncs = -(-st.decode_steps // max(1, ro.decode_chunk))
+        self.stage += 1
+        return st
+
+
+def run_multiturn(n_steps: int, *, serialize_env: bool,
+                  concurrency: int = 64, batch_size: int = 16,
+                  group_size: int = 4, decode_chunk: int = 8,
+                  cluster: Optional[ClusterModel] = None,
+                  env: Optional[EnvModel] = None, seed: int = 0):
+    """Run n multi-turn RL steps; returns list of StepStats. The two
+    ``serialize_env`` settings simulate the same episode workload, so their
+    wall-clock difference is purely the env-wait scheduling policy."""
+    cluster = cluster or ClusterModel()
+    env = env or EnvModel()
+    ro = RolloutConfig(batch_size=batch_size, group_size=group_size,
+                       concurrency=concurrency, mode="copris",
+                       max_response_len=32768, decode_chunk=decode_chunk)
+    sim = MultiTurnSim(ro, cluster, env, serialize_env, seed=seed)
+    return [sim.run_step() for _ in range(n_steps)]
 
 
 def pipeline_schedule(stats, max_staleness: int = 1) -> dict:
@@ -432,6 +657,30 @@ def _smoke(n_steps: int, seed: int = 0) -> list:
             staleness_trace=sch["staleness_trace"],
             evicted=sum(s.evicted for s in bal),
             generated_tokens=sum(s.generated_tokens for s in bal)))
+    # multi-turn environments: slot-yielding overlap (the live engine's
+    # _stop_slot/_poll_env policy) vs blocking on env.step inline. Same
+    # episode workload in both runs; the wall difference is pure env-wait
+    # scheduling — the inline driver pays every env latency as idle engine
+    # time, the overlapped one hides it behind other slots' decode and only
+    # pays re-prefill for the resumed turns.
+    mt_ov = run_multiturn(n_steps, serialize_env=False, seed=seed)
+    mt_ser = run_multiturn(n_steps, serialize_env=True, seed=seed)
+    rows.append(dict(
+        mode="copris_multiturn", decode_chunk=8, overlap=True,
+        steps=n_steps,
+        step_time=sum(s.step_time for s in mt_ov),
+        serialized_step_time=sum(s.step_time for s in mt_ser),
+        env_steps=sum(s.env_steps for s in mt_ov),
+        env_stall_time=sum(s.env_stall_time for s in mt_ov),
+        serialized_env_stall_time=sum(s.env_stall_time for s in mt_ser),
+        env_tokens=sum(s.env_tokens for s in mt_ov),
+        generated_tokens=sum(s.generated_tokens for s in mt_ov),
+        slot_utilization=float(
+            sum(s.slot_utilization for s in mt_ov) / len(mt_ov)),
+        serialized_slot_utilization=float(
+            sum(s.slot_utilization for s in mt_ser) / len(mt_ser)),
+        resumed=sum(s.resumed for s in mt_ov),
+        evicted=sum(s.evicted for s in mt_ov)))
     # overlap-aware adaptive N': rollout fits inside a slow train step, so
     # the controller shrinks the in-flight target between stages, cutting
     # evicted (guaranteed off-policy) long-tail work without giving back
@@ -506,6 +755,14 @@ def main(argv=None) -> None:
         assert (stale[1]["mean_staleness"] <= stale[2]["mean_staleness"]
                 <= stale[4]["mean_staleness"]), \
             f"staleness must be monotone in pipeline depth: {stale}"
+        # multi-turn env smoke: overlapping env waits with decode must beat
+        # serializing them, and the overlapped engine must spend (strictly)
+        # less wall blocked on environments
+        mt = next(r for r in rows if r["mode"] == "copris_multiturn")
+        assert mt["step_time"] < mt["serialized_step_time"], \
+            f"env-wait overlap did not save time: {mt}"
+        assert mt["env_stall_time"] < mt["serialized_env_stall_time"], mt
+        assert mt["env_steps"] > 0 and mt["env_tokens"] > 0, mt
         adaptive = next(r for r in rows if r["mode"] == "copris_adaptive")
         assert len(adaptive["concurrency_trace"]) == adaptive["steps"] + 1, \
             f"adaptive row must carry its per-stage N' trace: {adaptive}"
@@ -526,7 +783,10 @@ def main(argv=None) -> None:
                          for K, r in sorted(stale.items()))
               + f"; adaptive N' {adaptive['concurrency_trace']} "
               f"evicted {adaptive['static_evicted']} -> "
-              f"{adaptive['evicted']}")
+              f"{adaptive['evicted']}; multiturn wall "
+              f"{mt['serialized_step_time']:.0f} -> {mt['step_time']:.0f} "
+              f"(env stall {mt['serialized_env_stall_time']:.0f} -> "
+              f"{mt['env_stall_time']:.0f})")
     else:
         print(blob)
 

@@ -38,7 +38,7 @@ print("decoded 4 tokens:", tok)
 step = jax.jit(make_train_step(cfg, TrainConfig(lr=1e-4, remat=False)))
 batch = {
     "tokens": tokens,
-    "response_mask": jnp.ones((2, 16)).at[:, :4].set(0.0),
+    "loss_mask": jnp.ones((2, 16)).at[:, :4].set(0.0),
     # plausible behaviour logps (≈ current policy ± noise) so ratios are O(1)
     "behaviour_logp": -jnp.log(cfg.vocab_size * 1.0)
     + 0.1 * jax.random.normal(jax.random.PRNGKey(2), (2, 16)),

@@ -307,6 +307,12 @@ class RolloutConfig:
     # Share a group's common prompt pages across its G samples (refcounted,
     # COW on first divergent write): one prefill feeds the whole group.
     kv_prefix_sharing: bool = True
+    # --- multi-turn environments ---
+    # Per-submit deadline (seconds) for async Environment.step / reward
+    # calls. A step that exceeds it ends the episode with the reward
+    # accumulated so far (counted in env_failures / env_timeouts) instead of
+    # wedging the stage. 0 = no deadline (trust the env to return).
+    env_step_timeout: float = 0.0
 
     @property
     def resolved_concurrency_min(self) -> int:
@@ -347,6 +353,10 @@ class RolloutConfig:
             raise ValueError(
                 f"kv_num_pages must be >= 0 (0 = dense-equivalent budget), "
                 f"got {self.kv_num_pages}")
+        if self.env_step_timeout < 0:
+            raise ValueError(
+                f"env_step_timeout must be >= 0 (0 = no deadline), "
+                f"got {self.env_step_timeout}")
         if self.concurrency_min < 0 or self.concurrency_max < 0:
             raise ValueError(
                 "concurrency_min/concurrency_max must be >= 0 (0 = derive "

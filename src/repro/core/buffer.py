@@ -52,11 +52,14 @@ class TrajectoryBuffer:
     # ------------------------------------------------------------------
     def pop_resumable(self, exclude=()) -> Optional[Trajectory]:
         """Longest unfinished partial trajectory (prioritized resumption).
-        ``exclude``: traj_ids currently in flight."""
+        ``exclude``: traj_ids currently in flight. Trajectories parked on a
+        pending environment step own no decodable state — they re-enter
+        dispatch only once their observation lands (awaiting_env clears)."""
         best = None
         for g in self._groups.values():
             for t in g.trajectories:
-                if (not t.done and t.traj_id not in exclude
+                if (not t.done and not t.awaiting_env
+                        and t.traj_id not in exclude
                         and (best is None or t.total_len > best.total_len)):
                     best = t
         if best is not None:
@@ -81,11 +84,12 @@ class TrajectoryBuffer:
         return out
 
     def off_policy_token_fraction(self, stage: int) -> float:
-        """Fraction of buffered tokens older than ``stage`` (the stage that
-        would consume them next)."""
+        """Fraction of buffered MODEL tokens older than ``stage`` (the stage
+        that would consume them next). Env observation tokens are excluded
+        from both sides — the IS correction never sees them."""
         tok = off = 0
         for g in self._groups.values():
             for t in g.trajectories:
-                tok += len(t.response_tokens)
+                tok += t.model_token_count
                 off += t.off_policy_tokens(stage)
         return off / tok if tok else 0.0

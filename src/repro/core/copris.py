@@ -63,7 +63,11 @@ def make_loss_fn(cfg: ModelConfig, tcfg: TrainConfig, *, use_pallas=False):
     def loss_fn(params, mb):
         tokens = mb["tokens"]
         inputs, targets = tokens[:, :-1], tokens[:, 1:]
-        mask = mb["response_mask"][:, 1:]
+        # loss_mask = response positions ∧ model role: environment
+        # observation tokens are masked out of the loss, the IS ratio, and
+        # every mask-weighted metric (for single-turn batches it is
+        # identical to the historical response mask)
+        mask = mb["loss_mask"][:, 1:]
         behaviour = mb["behaviour_logp"][:, 1:]
         media = mb.get("media")
         entropy = None
@@ -198,12 +202,24 @@ class CoPRISTrainer:
         self.key, k_init = jax.random.split(key)
         self.params = params if params is not None else M.init_params(k_init, model_cfg)
         self.opt_state = adam.init(self.params)
-        from repro.core.reward_worker import AsyncRewardWorker
-        self.reward_worker = AsyncRewardWorker(task.reward)
+        from repro.core.reward_worker import AsyncEnvWorker, AsyncRewardWorker
+        timeout = ro_cfg.env_step_timeout or None
+        self.reward_worker = AsyncRewardWorker(task.reward, timeout=timeout)
+        # multi-turn: a task exposing make_env(spec) routes every turn
+        # through the async env pool — the engine yields decode slots while
+        # episodes wait on their environments. make_env must be a pure
+        # function of the spec (no task RNG), so no ThreadSafeTask guard.
+        self.env_worker = None
+        env_factory = None
+        if hasattr(task, "make_env"):
+            self.env_worker = AsyncEnvWorker(timeout=timeout)
+            env_factory = task.make_env
         self.engine = RolloutEngine(model_cfg, ro_cfg,
                                     self.safe_task.sample_prompt,
                                     eos_id=eos_id, use_pallas=use_pallas,
-                                    on_finish=self.reward_worker.submit)
+                                    on_finish=self.reward_worker.submit,
+                                    env_factory=env_factory,
+                                    env_worker=self.env_worker)
         self._train_step = jax.jit(make_train_step(model_cfg, tcfg,
                                                    use_pallas=use_pallas))
         self.stage = 0
@@ -373,7 +389,7 @@ class CoPRISTrainer:
         adv = grpo.group_advantages(
             jnp.asarray(batch["rewards"]), self.ro.group_size)
         jb = {k: jnp.asarray(v) for k, v in batch.items()
-              if k in ("tokens", "response_mask", "behaviour_logp")}
+              if k in ("tokens", "loss_mask", "behaviour_logp")}
         jb["advantages"] = adv
         lr = schedule.warmup_constant(jnp.asarray(train_stage, jnp.float32),
                                       lr=self.tcfg.lr,
@@ -472,6 +488,13 @@ class CoPRISTrainer:
             mean_resp_len=float(np.mean([len(t.response_tokens)
                                          for g in groups
                                          for t in g.trajectories])),
+            # multi-turn environment accounting (all 0 for single-turn)
+            env_steps=roll_stats.get("env_steps", 0),
+            env_turns=roll_stats.get("env_turns", 0),
+            env_failures=roll_stats.get("env_failures", 0),
+            env_wait_time=roll_stats.get("env_wait_time", 0.0),
+            env_timeouts=(self.env_worker.stats_snapshot()["env_timeouts"]
+                          if self.env_worker is not None else 0),
         )
         self._reported_dropped = ps_stats["dropped"]
         self._reported_reshard_time = ps_stats["reshard_time"]
@@ -521,6 +544,8 @@ class CoPRISTrainer:
                     pass
                 self._producer.join(timeout=0.2)
         self.reward_worker.shutdown()
+        if self.env_worker is not None:
+            self.env_worker.shutdown()
 
     def __enter__(self):
         return self

@@ -31,8 +31,15 @@ def pack_groups(groups: List[Group], *, pad_multiple: int = 64,
     prompt_lens     (N,)   int32
     total_lens      (N,)   int32
     response_mask   (N, T) float32 — 1.0 on response token positions
-    behaviour_logp  (N, T) float32 — aligned to token positions (response only)
-    stage_ids       (N, T) int32  — policy version per token (-1 elsewhere)
+                    (model AND env — the context the model conditioned on)
+    loss_mask       (N, T) float32 — 1.0 on MODEL response positions only;
+                    THE mask grpo_loss / the IS ratio consume. Env
+                    observation tokens are 0 here by construction.
+    behaviour_logp  (N, T) float32 — aligned to token positions (response
+                    only; 0.0 at env positions — never sampled)
+    stage_ids       (N, T) int32  — policy version per MODEL token
+                    (-1 elsewhere, including env positions: env tokens
+                    carry no staleness — the IS ratio never sees them)
     rewards         (N,)   float32
     group_index     (N,)   int32
     """
@@ -45,6 +52,7 @@ def pack_groups(groups: List[Group], *, pad_multiple: int = 64,
 
     tokens = np.full((N, T), pad_id, np.int32)
     response_mask = np.zeros((N, T), np.float32)
+    loss_mask = np.zeros((N, T), np.float32)
     behaviour = np.zeros((N, T), np.float32)
     stages = np.full((N, T), -1, np.int32)
     prompt_lens = np.zeros(N, np.int32)
@@ -66,12 +74,20 @@ def pack_groups(groups: List[Group], *, pad_multiple: int = 64,
         total_lens[n] = L
         R = max(L - P, 0)
         if R:
+            roles = np.asarray(t.roles[:R], np.float32)
             response_mask[n, P:L] = 1.0
-            behaviour[n, P:L] = np.asarray(t.behaviour_logps[:R], np.float32)
-            stages[n, P:L] = np.asarray(t.stage_ids[:R], np.int32)
+            loss_mask[n, P:L] = roles
+            # env positions carry behaviour logp 0 / stage -1 BY
+            # CONSTRUCTION even if a custom trajectory recorded otherwise —
+            # the packed batch is the loss's source of truth
+            behaviour[n, P:L] = (np.asarray(t.behaviour_logps[:R], np.float32)
+                                 * roles)
+            stg = np.asarray(t.stage_ids[:R], np.int32)
+            stages[n, P:L] = np.where(roles > 0, stg, -1)
         rewards[n] = 0.0 if t.reward is None else t.reward
         group_index[n] = t.group_id
 
     return dict(tokens=tokens, prompt_lens=prompt_lens, total_lens=total_lens,
-                response_mask=response_mask, behaviour_logp=behaviour,
-                stage_ids=stages, rewards=rewards, group_index=group_index)
+                response_mask=response_mask, loss_mask=loss_mask,
+                behaviour_logp=behaviour, stage_ids=stages, rewards=rewards,
+                group_index=group_index)

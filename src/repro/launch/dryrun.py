@@ -99,7 +99,7 @@ def input_specs(cfg: ModelConfig, shape: InputShape, mesh, *,
         opt_shape = jax.eval_shape(adam.init, params_shape)
         batch = {
             "tokens": sds((B, S), I32),
-            "response_mask": sds((B, S), F32),
+            "loss_mask": sds((B, S), F32),
             "behaviour_logp": sds((B, S), F32),
             "advantages": sds((B,), F32),
         }

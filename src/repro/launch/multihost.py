@@ -95,8 +95,8 @@ def main(argv=None):
                 "tokens": jax.device_put(
                     rng.integers(0, cfg.vocab_size, (B, S)).astype(np.int32),
                     b_sh["tokens"]),
-                "response_mask": jax.device_put(
-                    np.ones((B, S), np.float32), b_sh["response_mask"]),
+                "loss_mask": jax.device_put(
+                    np.ones((B, S), np.float32), b_sh["loss_mask"]),
                 "behaviour_logp": jax.device_put(
                     np.zeros((B, S), np.float32), b_sh["behaviour_logp"]),
                 "advantages": jax.device_put(

@@ -176,7 +176,7 @@ def train_batch_shardings(mesh: Mesh, *, has_media: bool = False):
     s = lambda *spec: NamedSharding(mesh, P(*spec))
     out = {
         "tokens": s(dp, None),
-        "response_mask": s(dp, None),
+        "loss_mask": s(dp, None),
         "behaviour_logp": s(dp, None),
         "advantages": s(dp),
     }

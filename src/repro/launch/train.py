@@ -21,8 +21,21 @@ from repro.common.config import RolloutConfig, TrainConfig
 from repro.configs import get_config, get_smoke_config
 from repro.core.copris import CoPRISTrainer
 from repro.data.sft import sft_warmup
-from repro.data.tasks import AdditionTask, EOS
+from repro.data.tasks import (AdditionTask, EOS, MultiTurnMathTask,
+                              ToolCallTask)
 from repro.models import model as M
+
+
+def make_task(name: str, seed: int):
+    """--task registry. Multi-turn tasks expose make_env(spec) and route
+    rollouts through the async environment worker."""
+    if name == "addition":
+        return AdditionTask(max_value=20, seed=seed)
+    if name == "multiturn_math":
+        return MultiTurnMathTask(max_value=9, num_turns=2, seed=seed)
+    if name == "toolcall":
+        return ToolCallTask(max_value=9, seed=seed)
+    raise ValueError(f"unknown task {name!r}")
 
 
 def main(argv=None):
@@ -32,6 +45,16 @@ def main(argv=None):
                     help="use the reduced variant of --arch")
     ap.add_argument("--mode", default="copris",
                     choices=["copris", "sync", "naive_partial"])
+    ap.add_argument("--task", default="addition",
+                    choices=["addition", "multiturn_math", "toolcall"],
+                    help="multiturn_math / toolcall run multi-turn episodes "
+                         "through the async environment worker (env tokens "
+                         "are loss-masked; slots are yielded during env "
+                         "waits)")
+    ap.add_argument("--env-timeout", type=float, default=0.0,
+                    help="per-env-step deadline in seconds (0 = none); a "
+                         "step past it ends the episode with the reward so "
+                         "far instead of wedging the stage")
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--batch-size", type=int, default=8)
     ap.add_argument("--group-size", type=int, default=4)
@@ -70,7 +93,7 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
-    task = AdditionTask(max_value=20, seed=args.seed)
+    task = make_task(args.task, args.seed)
     os.makedirs(args.out, exist_ok=True)
 
     params = None
@@ -81,8 +104,13 @@ def main(argv=None):
     elif args.sft_warmup > 0:
         params = M.init_params(jax.random.PRNGKey(args.seed), cfg)
         print(f"SFT warmup {args.sft_warmup} steps…")
-        params, loss = sft_warmup(params, cfg, task, steps=args.sft_warmup,
-                                  log_every=50)
+        # multi-turn tasks have no supervised demos; warm up on the
+        # single-turn surrogate (digits + EOS — the per-turn answer format
+        # every env here shares)
+        demo_task = (task if hasattr(task, "demo")
+                     else AdditionTask(max_value=20, seed=args.seed))
+        params, loss = sft_warmup(params, cfg, demo_task,
+                                  steps=args.sft_warmup, log_every=50)
         print(f"  warmup done (loss {loss:.3f})")
 
     ro = RolloutConfig(batch_size=args.batch_size, group_size=args.group_size,
@@ -90,7 +118,8 @@ def main(argv=None):
                        concurrency=args.concurrency, mode=args.mode,
                        adaptive_concurrency=args.adaptive_concurrency,
                        concurrency_min=args.concurrency_min,
-                       concurrency_max=args.concurrency_max)
+                       concurrency_max=args.concurrency_max,
+                       env_step_timeout=args.env_timeout)
     tc = TrainConfig(lr=args.lr, warmup_steps=5, total_steps=args.steps,
                      use_is_correction=not args.no_is, seed=args.seed,
                      overlap=args.overlap, max_staleness=args.max_staleness,
@@ -114,6 +143,9 @@ def main(argv=None):
                              if args.overlap else "")
                     if args.adaptive_concurrency:
                         stale += f" N'={out['concurrency_target']}"
+                    if out.get("env_steps"):
+                        stale += (f" env={out['env_steps']}s/"
+                                  f"{out['env_turns']}t")
                     print(f"step {out['step']:4d} reward={out['reward_mean']:.3f} "
                           f"loss={out['pg_loss']:+.4f} ratio={out['ratio_mean']:.3f} "
                           f"off={out['off_policy_frac']:.2f} "

@@ -242,6 +242,70 @@ def test_race303_good_consistent_order():
     assert findings(src, "RACE303") == []
 
 
+def test_race301_env_worker_stats_shape():
+    # the AsyncEnvWorker shape: keyed futures map + stats counters shared
+    # between submitters and the polling engine thread. A timeout counter
+    # bumped outside the lock races every guarded site.
+    src = """
+    import threading
+
+    class EnvWorker:
+        def __init__(self):
+            self._lock = threading.Lock()
+            self._futures = {}
+            self._stats = {"submitted": 0, "env_timeouts": 0}
+
+        def submit(self, key, fn):
+            with self._lock:
+                self._futures[key] = fn
+                self._stats["submitted"] += 1
+
+        def poll(self):
+            for key in list(self._futures):
+                with self._lock:
+                    self._futures.pop(key)
+                self._stats["env_timeouts"] += 1   # unguarded
+    """
+    fs = findings(src, "RACE301")
+    assert len(fs) == 1
+    assert "self._stats" in fs[0].message and fs[0].context == "EnvWorker.poll"
+
+
+def test_race301_env_worker_futures_drop_shape():
+    # drop()/shutdown paths mutating the futures map without the lock
+    src = """
+    import threading
+
+    class EnvWorker:
+        def __init__(self):
+            self._lock = threading.Lock()
+            self._futures = {}
+
+        def submit(self, key, fn):
+            with self._lock:
+                self._futures[key] = fn
+
+        def drop(self, key):
+            self._futures.pop(key, None)           # unguarded
+    """
+    fs = findings(src, "RACE301")
+    assert len(fs) == 1 and "self._futures" in fs[0].message
+
+
+def test_racelint_clean_on_real_env_worker():
+    """The shipped AsyncEnvWorker/AsyncRewardWorker obey the lock
+    discipline the RACE rules encode — zero findings on the real module."""
+    import pathlib
+
+    path = "src/repro/core/reward_worker.py"
+    src = (pathlib.Path(__file__).resolve().parents[1] / path).read_text()
+    ctx = ModuleCtx(path, src)
+    for rule in ("RACE301", "RACE302", "RACE303"):
+        r = all_rules()[rule]()
+        assert r.applies_to(path)
+        assert [f for f in r.check(ctx) if f.rule == rule] == [], rule
+
+
 def test_racelint_scoped_to_core_and_serve():
     r = all_rules()["RACE301"]()
     assert r.applies_to("src/repro/core/rollout.py")

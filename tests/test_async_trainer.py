@@ -76,7 +76,7 @@ def _reference_run(params, n_steps, seed=0):
         adv = grpo.group_advantages(jnp.asarray(batch["rewards"]),
                                     ro.group_size)
         jb = {k: jnp.asarray(v) for k, v in batch.items()
-              if k in ("tokens", "response_mask", "behaviour_logp")}
+              if k in ("tokens", "loss_mask", "behaviour_logp")}
         jb["advantages"] = adv
         lr = schedule.warmup_constant(jnp.asarray(stage, jnp.float32),
                                       lr=tc.lr, warmup_steps=tc.warmup_steps)

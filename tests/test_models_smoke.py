@@ -46,7 +46,7 @@ def test_one_train_step(arch):
     B, S = 4, 16
     batch = {
         "tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
-        "response_mask": jnp.ones((B, S), jnp.float32).at[:, :4].set(0.0),
+        "loss_mask": jnp.ones((B, S), jnp.float32).at[:, :4].set(0.0),
         "behaviour_logp": -jnp.abs(jax.random.normal(key, (B, S))),
         "advantages": jnp.asarray([1.0, -1.0, 0.5, -0.5]),
     }

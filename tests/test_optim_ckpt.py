@@ -84,7 +84,7 @@ def test_trainer_state_resume(tmp_path):
     key = jax.random.PRNGKey(1)
     batch = {
         "tokens": jax.random.randint(key, (4, 32), 0, cfg.vocab_size),
-        "response_mask": jnp.ones((4, 32)).at[:, :8].set(0.0),
+        "loss_mask": jnp.ones((4, 32)).at[:, :8].set(0.0),
         "behaviour_logp": -jnp.abs(jax.random.normal(key, (4, 32))),
         "advantages": jnp.asarray([1.0, -1.0, 0.5, -0.5]),
     }
