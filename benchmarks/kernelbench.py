@@ -29,7 +29,8 @@ def main(rows_out):
     # one subkey per section, one per tensor: reusing a key hands two
     # "independent" samples the same bits (JAX102)
     key = jax.random.PRNGKey(0)
-    kflash, kdec, kwkv, kssm, klp, kpaged = jax.random.split(key, 6)
+    (kflash, kdec, kwkv, kssm, klp, kpaged, kgrpo,
+     ksamp) = jax.random.split(key, 8)
 
     # flash attention ref path (chunked jnp)
     from repro.models.attention import chunked_attention
@@ -105,6 +106,48 @@ def main(rows_out):
     rows_out.append(("kernel_fused_logprob_ref_32k", _time(f, h, wv, t),
                      "rows512 V32000 blocked"))
 
+    # fused IS+GRPO loss: unfused three-pass reference vs the fused blocked
+    # path, VALUE AND GRAD (the memory win is in value_and_grad — the fused
+    # custom_vjp never residualizes the (rows, V) tensor)
+    from repro.kernels.fused_is_grpo import ops as fio_ops
+    from repro.kernels.fused_is_grpo.ref import is_grpo_reference
+    kh, kwv, kt, kb, ka = jax.random.split(kgrpo, 5)
+    B, S, d, V = 4, 128, 256, 32000
+    hg = jax.random.normal(kh, (B, S, d)) * 0.3
+    wg = jax.random.normal(kwv, (d, V)) * 0.3
+    tg = jax.random.randint(kt, (B, S), 0, V)
+    bg = jax.random.normal(kb, (B, S)) * 0.3 - 4.0
+    ag = jax.random.normal(ka, (B, S))
+    gkw = dict(clip_low=0.2, clip_high=0.28, use_is=True, is_ratio_cap=10.0,
+               entropy_coef=0.01)
+
+    def _vg(op):
+        def f(h, w):
+            loss_tok, _, _, _ = op(h, w, tg, bg, ag)
+            return loss_tok.mean()
+        return jax.jit(jax.value_and_grad(f, argnums=(0, 1)))
+
+    f_ref = _vg(lambda h, w, t, b, a: is_grpo_reference(h, w, t, b, a, **gkw))
+    t_unfused = _time(lambda h, w: f_ref(h, w)[0], hg, wg)
+    rows_out.append(("kernel_is_grpo_unfused_ref_32k", t_unfused,
+                     "rows512 V32000 value_and_grad three-pass"))
+    f_fus = _vg(lambda h, w, t, b, a: fio_ops.fused_is_grpo(
+        h, w, t, b, a, impl="blocked", vocab_block=4096, **gkw))
+    t_fused = _time(lambda h, w: f_fus(h, w)[0], hg, wg)
+    rows_out.append(("kernel_fused_is_grpo_blocked_32k", t_fused,
+                     f"rows512 V32000 value_and_grad blocked "
+                     f"ratio_vs_unfused={t_fused / t_unfused:.2f}"))
+
+    # fused sampler: full-vocab XLA oracle (sort + softmax + cumsum + draw)
+    from repro.sampling import sampler
+    ks_, kl_ = jax.random.split(ksamp)
+    skeys = jax.random.split(ks_, 64)
+    slogits = jax.random.normal(kl_, (64, 32000)) * 4.0
+    f = jax.jit(lambda k, l: sampler.sample_rows(k, l, temperature=0.8,
+                                                 top_p=0.9, top_k=50))
+    rows_out.append(("kernel_sample_xla_ref_32k", _time(f, skeys, slogits),
+                     "B64 V32000 top_k=50 top_p=0.9 sort+softmax+cumsum"))
+
     # interpret-mode kernel correctness spot checks (status in derived col)
     from repro.kernels.flash_attn import ops as fa_ops
     from repro.kernels.flash_attn import ref as fa_ref
@@ -132,3 +175,39 @@ def main(rows_out):
     err = float(jnp.max(jnp.abs(o1 - o2)))
     rows_out.append(("kernel_paged_decode_attn_pallas_check", err,
                      f"interpret_allclose={'PASS' if err < 1e-4 else 'FAIL'}"))
+
+    # fused IS+GRPO Pallas kernel: forward AND grads vs the unfused ref
+    hc, wc = hg[:, :16], wg[:, :4096]
+    tc = jnp.minimum(tg[:, :16], 4095)
+    bc2, ac = bg[:, :16], ag[:, :16]
+    o1 = fio_ops.fused_is_grpo(hc, wc, tc, bc2, ac, impl="pallas",
+                               block_rows=64, block_v=512, **gkw)
+    o2 = is_grpo_reference(hc, wc, tc, bc2, ac, **gkw)
+    err = max(float(jnp.max(jnp.abs(a - b))) for a, b in zip(o1, o2))
+    g1 = jax.grad(lambda h: fio_ops.fused_is_grpo(
+        h, wc, tc, bc2, ac, impl="pallas", block_rows=64, block_v=512,
+        **gkw)[0].mean())(hc)
+    g2 = jax.grad(lambda h: is_grpo_reference(
+        h, wc, tc, bc2, ac, **gkw)[0].mean())(hc)
+    err = max(err, float(jnp.max(jnp.abs(g1 - g2))))
+    rows_out.append(("kernel_fused_is_grpo_pallas_check", err,
+                     f"interpret_allclose={'PASS' if err < 1e-4 else 'FAIL'}"))
+
+    # fused sampler: TOKEN BIT-IDENTITY vs the XLA oracle (the chunked
+    # engine's determinism contract), logp allclose
+    from repro.kernels.fused_sample import ops as fs_ops
+    sk = jax.random.split(jax.random.PRNGKey(7), 16)
+    sl = jax.random.normal(jax.random.PRNGKey(8), (16, 4096)) * 4.0
+    t_ref, lp_ref = sampler.sample_rows(sk, sl, temperature=0.8, top_p=0.9,
+                                        top_k=50)
+    t_fus, lp_fus = fs_ops.fused_sample_rows(sk, sl, temperature=0.8,
+                                             top_p=0.9, top_k=50,
+                                             block_rows=8, block_v=512,
+                                             interpret=True)
+    tok_ok = bool(jnp.all(t_fus == t_ref))
+    lp_err = float(jnp.max(jnp.abs(lp_fus - lp_ref)))
+    rows_out.append(("kernel_fused_sample_pallas_check",
+                     0.0 if tok_ok else 1.0,
+                     f"interpret_allclose="
+                     f"{'PASS' if tok_ok and lp_err < 1e-4 else 'FAIL'} "
+                     f"tokens_bitwise={tok_ok} logp_err={lp_err:.2e}"))

@@ -75,12 +75,70 @@ def kernel_rows():
     return out
 
 
+def rl_math_rows():
+    """Analytic HBM-bytes for the fused RL-loop math (PR 10), v5p constants.
+
+    Fused IS+GRPO loss forward at the training-recompute shape (R=8192
+    tokens, d=2048, V=32768, bf16 activations/weights, block_rows=1024):
+    the kernel streams ``hidden`` once and refetches the unembedding per
+    row-block; logp/ratio/objective/entropy come out of that ONE logits
+    pass and nothing (rows, V)-shaped is ever written. The unfused
+    three-pass path materializes f32 logits and crosses HBM four times
+    with them (logits write, log_softmax read+write, gather/entropy read).
+
+    Fused sampler at the serving shape (B=256, V=32768, f32 logits): each
+    phase of the [stats, 4x topk radix, 4x topp radix, draw] schedule
+    re-reads the logits block, writing only (B,) outputs. The XLA path is
+    counted CONSERVATIVELY as materialized (B, V) HBM round-trips: sort
+    for top-k/top-p (2 passes charged — the real bitonic network is
+    O(log^2 V) stages of compute on top), softmax + cumsum over the
+    sorted copy (4), threshold mask + where (3), log_softmax (3), Gumbel
+    noise + categorical argmax (3) = 15 passes; with no truncation it is
+    log_softmax (3) + Gumbel + argmax (3) = 6 vs the fused [stats, draw]
+    schedule's 2."""
+    from repro.launch.mesh import HBM_BW
+    out = []
+
+    R, d, V, br = 8192, 2048, 32768, 1024
+    fused_b = R * d * 2 + (R // br) * d * V * 2     # hidden once + w refetch
+    unfused_b = 4 * R * V * 4                       # (R,V) f32 logits x4
+    for name, byts in (("fused", fused_b), ("unfused3pass", unfused_b)):
+        t = byts / HBM_BW
+        out.append((f"roofline_is_grpo_{name}_32k", t * 1e6,
+                    f"memory={t*1e3:.2f}ms bytes={byts/2**30:.2f}GiB "
+                    f"R{R} d{d} V{V} block_rows={br}"))
+    out.append(("roofline_is_grpo_fused_frac", fused_b / unfused_b,
+                f"fused/unfused HBM-bytes at V=32k "
+                f"(acceptance: <= 0.40); logits are read ONCE and never "
+                "written"))
+
+    B, Vs = 256, 32768
+    row = B * Vs * 4
+    for name, fused_p, xla_p, cfgs in (
+            ("plain", 2, 6, "t=1.0 no truncation"),
+            ("topk_topp", 10, 15, "top_k=50 top_p=0.9")):
+        fb, xb = fused_p * row, xla_p * row
+        out.append((f"roofline_sample_fused_{name}_32k",
+                    fb / HBM_BW * 1e6,
+                    f"bytes={fb/2**20:.1f}MiB passes={fused_p} B{B} V{Vs} "
+                    f"{cfgs}"))
+        out.append((f"roofline_sample_xla_{name}_32k",
+                    xb / HBM_BW * 1e6,
+                    f"bytes={xb/2**20:.1f}MiB passes={xla_p} (conservative; "
+                    f"sort compute uncounted) {cfgs}"))
+        out.append((f"roofline_sample_saving_{name}", xb / fb,
+                    f"xla/fused HBM-bytes {cfgs} (acceptance: > 1; the "
+                    "full-vocab sort's O(log^2 V) compute is on top)"))
+    return out
+
+
 def _round_up(n, m):
     return -(-n // m) * m
 
 
 def main(rows_out):
     rows_out.extend(kernel_rows())
+    rows_out.extend(rl_math_rows())
     rows_out.extend(rows())
     # multi-pod summary line
     mp = load(os.path.join(BASE, "dryrun_multipod.json"))

@@ -735,11 +735,42 @@ def _harness_rwkv6_scan():
     wkv6_bh(r, r, r, r, u, s0, chunk=128)
 
 
+def _harness_fused_is_grpo():
+    import jax.numpy as jnp
+    from repro.kernels.fused_is_grpo.fused_is_grpo import (
+        fused_is_grpo_bwd_rows,
+        fused_is_grpo_fwd_rows,
+    )
+    R, d, V = 512, 1024, 4096
+    h = jnp.zeros((R, d), jnp.float32)
+    w = jnp.zeros((d, V), jnp.float32)
+    t = jnp.zeros((R,), jnp.int32)
+    r = jnp.zeros((R,), jnp.float32)
+    fused_is_grpo_fwd_rows(h, w, t, r, r, logit_softcap=30.0,
+                           entropy_coef=0.01)
+    # both backward kernels (dh: grid (nr, nv); dw: grid (nv, nr))
+    fused_is_grpo_bwd_rows(h, w, t, r, r, r, r, logit_softcap=30.0)
+
+
+def _harness_fused_sample():
+    import jax.numpy as jnp
+    from repro.kernels.fused_sample.fused_sample import fused_sample_rows_kernel
+    B, V = 64, 4096
+    keys = jnp.zeros((B, 2), jnp.uint32)
+    logits = jnp.zeros((B, V), jnp.float32)
+    # top-k AND top-p active: the full [stats, 4x topk, 4x topp, draw]
+    # phase schedule is what gets interval-checked
+    fused_sample_rows_kernel(keys, logits, temperature=0.8, top_k=50,
+                             top_p=0.9)
+
+
 HARNESSES = {
     "decode_attn": _harness_decode_attn,
     "paged_decode_attn": _harness_paged_decode_attn,
     "flash_attn": _harness_flash_attn,
     "fused_logprob": _harness_fused_logprob,
+    "fused_is_grpo": _harness_fused_is_grpo,
+    "fused_sample": _harness_fused_sample,
     "ssm_scan": _harness_ssm_scan,
     "rwkv6_scan": _harness_rwkv6_scan,
 }

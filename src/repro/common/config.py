@@ -397,6 +397,14 @@ class TrainConfig:
     loss_agg: str = "token_mean"       # paper: token mean
     use_is_correction: bool = True     # the CoPRIS cross-stage IS switch
     is_ratio_cap: float = 10.0         # numerical safety cap on exp(logp-L)
+    # Route the big-vocab loss through the fused IS+GRPO op
+    # (kernels/fused_is_grpo): one pass over the logits computes logp,
+    # entropy and the clipped objective, and the custom VJP recomputes
+    # per-block softmax stats so the (B, S, V) tensor is never residualized.
+    # False falls back to the legacy score_logprobs path, which cannot emit
+    # entropy above FUSED_VOCAB_THRESHOLD (make_loss_fn raises if
+    # entropy_coef > 0 there rather than silently dropping the bonus).
+    fused_loss: bool = True
     microbatches: int = 1
     remat: bool = True
     seed: int = 0

@@ -59,6 +59,13 @@ FUSED_VOCAB_THRESHOLD = 8192     # above this, use the vocab-blocked logp path
 def make_loss_fn(cfg: ModelConfig, tcfg: TrainConfig, *, use_pallas=False):
     aux_coef = cfg.moe.router_aux_coef if cfg.moe is not None else 0.0
     big_vocab = cfg.vocab_size >= FUSED_VOCAB_THRESHOLD
+    if big_vocab and not tcfg.fused_loss and tcfg.entropy_coef > 0.0:
+        raise ValueError(
+            f"entropy_coef={tcfg.entropy_coef} with fused_loss=False: the "
+            f"legacy score_logprobs path cannot compute entropy above "
+            f"FUSED_VOCAB_THRESHOLD={FUSED_VOCAB_THRESHOLD} (vocab_size="
+            f"{cfg.vocab_size}) — the bonus would silently be dropped. "
+            "Enable TrainConfig.fused_loss or set entropy_coef=0.")
 
     def loss_fn(params, mb):
         tokens = mb["tokens"]
@@ -70,16 +77,47 @@ def make_loss_fn(cfg: ModelConfig, tcfg: TrainConfig, *, use_pallas=False):
         mask = mb["loss_mask"][:, 1:]
         behaviour = mb["behaviour_logp"][:, 1:]
         media = mb.get("media")
-        entropy = None
-        if big_vocab:
-            # fused logprob recompute — the paper's "Cal logprob" stage.
-            # vocab_block=0: under pjit the (B, S, V) logits shard over
-            # (data, model) to a small per-device block, and XLA keeps full
-            # sharding freedom; dynamic-slicing a vocab-sharded weight
-            # (the blocked path) forces resharding (dry-run HLO finding).
+        if big_vocab and tcfg.fused_loss:
+            # fused IS+GRPO loss (kernels/fused_is_grpo): ONE pass over the
+            # logits computes logp, entropy and the clipped objective; the
+            # custom VJP recomputes per-block stats in the backward so the
+            # (B, S, V) tensor is never residualized. impl choice mirrors
+            # the old score_logprobs split: Pallas on accelerators,
+            # "materialize" for SPMD — under pjit the one-shot einsum lets
+            # the logits shard over (data, model), while dynamic-slicing a
+            # vocab-sharded weight (the blocked path) forces resharding
+            # (dry-run HLO finding).
+            from repro.kernels.fused_is_grpo import ops as fio_ops
+            hidden, aux = M.forward_hidden(
+                params, cfg, inputs, media=media, use_pallas=use_pallas,
+                remat=tcfg.remat)
+            w = M.unembed_weight(params, cfg)
+            adv_tok = jnp.broadcast_to(
+                mb["advantages"][:, None], targets.shape)
+            loss_tok, ratio, logp_new, entropy = fio_ops.fused_is_grpo(
+                hidden, w, targets, behaviour, adv_tok,
+                logit_softcap=cfg.logit_softcap, clip_low=tcfg.clip_low,
+                clip_high=tcfg.clip_high, use_is=tcfg.use_is_correction,
+                is_ratio_cap=tcfg.is_ratio_cap,
+                entropy_coef=tcfg.entropy_coef,
+                impl="pallas" if use_pallas else "materialize")
+            loss, metrics = grpo.aggregate_loss(
+                loss_tok, ratio, logp_new, behaviour, mask,
+                clip_low=tcfg.clip_low, use_is=tcfg.use_is_correction,
+                loss_agg=tcfg.loss_agg)
+        elif big_vocab:
+            # legacy fused-logprob recompute (no entropy available —
+            # entropy_coef > 0 is rejected at build time above)
+            entropy = None
             logp_new, aux = M.score_logprobs(
                 params, cfg, inputs, targets, media=media,
                 use_pallas=use_pallas, remat=tcfg.remat, vocab_block=0)
+            loss, metrics = grpo.grpo_loss(
+                logp_new, behaviour, mb["advantages"], mask,
+                clip_low=tcfg.clip_low, clip_high=tcfg.clip_high,
+                use_is=tcfg.use_is_correction, is_ratio_cap=tcfg.is_ratio_cap,
+                loss_agg=tcfg.loss_agg, entropy=entropy,
+                entropy_coef=tcfg.entropy_coef)
         else:
             logits, aux = M.forward_train(params, cfg, inputs, media=media,
                                           use_pallas=use_pallas,
@@ -88,12 +126,12 @@ def make_loss_fn(cfg: ModelConfig, tcfg: TrainConfig, *, use_pallas=False):
             logp_new = jnp.take_along_axis(
                 logp_all, targets[..., None], axis=-1)[..., 0]
             entropy = -(jnp.exp(logp_all) * logp_all).sum(-1)
-        loss, metrics = grpo.grpo_loss(
-            logp_new, behaviour, mb["advantages"], mask,
-            clip_low=tcfg.clip_low, clip_high=tcfg.clip_high,
-            use_is=tcfg.use_is_correction, is_ratio_cap=tcfg.is_ratio_cap,
-            loss_agg=tcfg.loss_agg, entropy=entropy,
-            entropy_coef=tcfg.entropy_coef)
+            loss, metrics = grpo.grpo_loss(
+                logp_new, behaviour, mb["advantages"], mask,
+                clip_low=tcfg.clip_low, clip_high=tcfg.clip_high,
+                use_is=tcfg.use_is_correction, is_ratio_cap=tcfg.is_ratio_cap,
+                loss_agg=tcfg.loss_agg, entropy=entropy,
+                entropy_coef=tcfg.entropy_coef)
         if entropy is not None:
             denom = jnp.maximum(mask.sum(), 1.0)
             metrics["entropy"] = (entropy * mask).sum() / denom

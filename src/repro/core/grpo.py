@@ -7,6 +7,12 @@
 * asymmetric clip (clip_low=0.2 / clip_high=0.28, Table 3)
 * token-mean aggregation
 * optional entropy bonus and low-var KL to a reference policy (β=0 default)
+
+The objective is split into :func:`per_token_objective` (elementwise math —
+the single source of truth that the fused Pallas kernel in
+``kernels/fused_is_grpo`` calls inside its final vocab block) and
+:func:`aggregate_loss` (mask-weighted reduction + metrics). ``grpo_loss``
+composes the two and is the unfused reference path.
 """
 from __future__ import annotations
 
@@ -24,21 +30,25 @@ def group_advantages(rewards, group_size: int, *, eps: float = 1e-6):
     return ((r - mean) / (std + eps)).reshape(-1)
 
 
-def grpo_loss(logp_new, behaviour_logp, advantages, mask, *,
-              clip_low: float = 0.2, clip_high: float = 0.28,
-              use_is: bool = True, is_ratio_cap: float = 10.0,
-              loss_agg: str = "token_mean",
-              entropy: Optional[jnp.ndarray] = None,
-              entropy_coef: float = 0.0,
-              ref_logp: Optional[jnp.ndarray] = None,
-              kl_coef: float = 0.0):
-    """All (N, T') token-aligned; advantages (N,). Returns (loss, metrics)."""
-    adv = advantages[:, None]
+def per_token_objective(logp_new, behaviour_logp, adv, *,
+                        clip_low: float = 0.2, clip_high: float = 0.28,
+                        use_is: bool = True, is_ratio_cap: float = 10.0,
+                        entropy: Optional[jnp.ndarray] = None,
+                        entropy_coef: float = 0.0,
+                        ref_logp: Optional[jnp.ndarray] = None,
+                        kl_coef: float = 0.0):
+    """Elementwise clipped-IS objective. All args broadcast together.
+
+    Returns ``(loss_tok, ratio)`` with the same shape as ``logp_new``.
+    ``adv`` must already be broadcastable against ``logp_new`` (callers
+    with per-sequence advantages pass ``advantages[:, None]``).
+    """
     if use_is:
         log_ratio = logp_new - behaviour_logp
         # numerical safety: behaviour logps come from a different stage;
         # cap the ratio so one stale token cannot blow up the update
-        log_ratio = jnp.clip(log_ratio, -jnp.log(is_ratio_cap), jnp.log(is_ratio_cap))
+        log_ratio = jnp.clip(log_ratio, -jnp.log(is_ratio_cap),
+                             jnp.log(is_ratio_cap))
     else:
         log_ratio = logp_new - jax.lax.stop_gradient(logp_new)
     ratio = jnp.exp(log_ratio)
@@ -54,7 +64,13 @@ def grpo_loss(logp_new, behaviour_logp, advantages, mask, *,
         loss_tok = loss_tok + kl_coef * (jnp.exp(d) - d - 1.0)
     if entropy_coef > 0.0 and entropy is not None:
         loss_tok = loss_tok - entropy_coef * entropy
+    return loss_tok, ratio
 
+
+def aggregate_loss(loss_tok, ratio, logp_new, behaviour_logp, mask, *,
+                   clip_low: float = 0.2, use_is: bool = True,
+                   loss_agg: str = "token_mean"):
+    """Mask-weighted reduction of per-token losses + the standard metrics."""
     denom = jnp.maximum(mask.sum(), 1.0)
     if loss_agg == "token_mean":
         loss = (loss_tok * mask).sum() / denom
@@ -74,3 +90,21 @@ def grpo_loss(logp_new, behaviour_logp, advantages, mask, *,
         "approx_kl": approx_kl,
     }
     return loss, metrics
+
+
+def grpo_loss(logp_new, behaviour_logp, advantages, mask, *,
+              clip_low: float = 0.2, clip_high: float = 0.28,
+              use_is: bool = True, is_ratio_cap: float = 10.0,
+              loss_agg: str = "token_mean",
+              entropy: Optional[jnp.ndarray] = None,
+              entropy_coef: float = 0.0,
+              ref_logp: Optional[jnp.ndarray] = None,
+              kl_coef: float = 0.0):
+    """All (N, T') token-aligned; advantages (N,). Returns (loss, metrics)."""
+    loss_tok, ratio = per_token_objective(
+        logp_new, behaviour_logp, advantages[:, None],
+        clip_low=clip_low, clip_high=clip_high, use_is=use_is,
+        is_ratio_cap=is_ratio_cap, entropy=entropy, entropy_coef=entropy_coef,
+        ref_logp=ref_logp, kl_coef=kl_coef)
+    return aggregate_loss(loss_tok, ratio, logp_new, behaviour_logp, mask,
+                          clip_low=clip_low, use_is=use_is, loss_agg=loss_agg)

@@ -166,6 +166,21 @@ class RolloutEngine:
         is_paged = self.backend.is_paged          # static: baked into jits
         page_size = ro_cfg.kv_page_size
 
+        # One sampler for both prefill and decode. Above the Pallas gate the
+        # fused top-k/top-p kernel (kernels/fused_sample) draws tokens
+        # without materialising a full-vocab softmax/sort per step; it
+        # regenerates the same threefry Gumbel bits, so token streams stay
+        # bit-identical to the XLA sampler (and chunk-size invariant).
+        if use_pallas:
+            from repro.kernels.fused_sample import ops as fs_ops
+            _sample_rows = functools.partial(
+                fs_ops.fused_sample_rows, temperature=ro_cfg.temperature,
+                top_p=ro_cfg.top_p, top_k=ro_cfg.top_k)
+        else:
+            _sample_rows = functools.partial(
+                sampler.sample_rows, temperature=ro_cfg.temperature,
+                top_p=ro_cfg.top_p, top_k=ro_cfg.top_k)
+
         def _sample_step(logits, cache_len, active, aux):
             """Device-side sample + stop detection via the SAME predicate as
             the host's _maybe_done (`stop_flags`). Slot invariant entering a
@@ -173,9 +188,7 @@ class RolloutEngine:
             lands resp == resp_len+1 and total == cache_len + 2."""
             resp_len, slot_keys = aux
             keys = jax.vmap(jax.random.fold_in)(slot_keys, resp_len)
-            tok, logp = sampler.sample_rows(
-                keys, logits, temperature=ro_cfg.temperature,
-                top_p=ro_cfg.top_p, top_k=ro_cfg.top_k)
+            tok, logp = _sample_rows(keys, logits)
             resp_new = resp_len + active.astype(jnp.int32)
             eos, length = stop_flags(
                 tok, resp_new, cache_len + 2, eos_id=eos_id,
@@ -215,9 +228,7 @@ class RolloutEngine:
             logits = jnp.take(logits, row_map, axis=0, mode="clip")
             keys = jax.vmap(jax.random.fold_in)(
                 _fold_slot_keys(stage_key, gid, sidx), resp_idx)
-            tok, logp = sampler.sample_rows(
-                keys, logits, temperature=ro_cfg.temperature,
-                top_p=ro_cfg.top_p, top_k=ro_cfg.top_k)
+            tok, logp = _sample_rows(keys, logits)
             if is_paged:
                 cache = kvc.paged_insert_rows(cache, scratch, slot_ids,
                                               row_map, flat_pos)

@@ -1,0 +1,267 @@
+"""Public fused IS+GRPO loss op with a memory-safe ``jax.custom_vjp``.
+
+``fused_is_grpo`` computes per-token ``(loss_tok, ratio, logp, entropy)``
+for the CoPRIS cross-stage IS / GRPO objective directly from
+``(hidden, unembedding)`` — the (B, S, V) log-prob tensor is never
+*residualized*: the forward streams vocab blocks (or frees the logits
+after one reduction in ``materialize`` mode) and the backward recomputes
+per-block softmax statistics from O(B·S) saved values. Today's unfused
+``value_and_grad`` path keeps the full log-prob tensor alive between
+forward and backward; this op is the drop-in replacement above
+``FUSED_VOCAB_THRESHOLD``.
+
+Three interchangeable implementations (same custom VJP wrapper):
+
+* ``pallas``      — the vocab-blocked Pallas kernels (TPU hot path;
+                    interpret-mode fallback on CPU, PAL202 contract);
+* ``blocked``     — a pure-jnp ``lax.scan`` over vocab blocks, keeping
+                    (B, S) batch dims (memory-safe without Pallas);
+* ``materialize`` — one full einsum with pjit sharding annotations
+                    (the SPMD dry-run path: logits shard over
+                    (data, model); blocking would force a reshard of the
+                    vocab-sharded weight — see core/copris.py).
+
+The elementwise objective itself is ``grpo.per_token_objective`` in every
+mode — including inside the Pallas kernel — so the RL math has exactly one
+definition. The backward maps the upstream cotangents of ``(loss_tok,
+ratio)`` through ``jax.vjp`` of that same epilogue to per-row logp/entropy
+coefficients, which is what makes the fused gradient match ``jax.grad`` of
+the unfused reference bit-for-bit in tie/clip-boundary cases.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import grpo
+from repro.kernels.fused_is_grpo import fused_is_grpo as _k
+
+NEG_INF = -1e30
+
+
+class _Cfg(NamedTuple):
+    logit_softcap: float
+    clip_low: float
+    clip_high: float
+    use_is: bool
+    is_ratio_cap: float
+    entropy_coef: float
+    impl: str
+    vocab_block: int
+    block_rows: int
+    block_v: int
+    interpret: bool
+
+
+def _softcap(x, cap):
+    return jnp.tanh(x / cap) * cap if cap and cap > 0.0 else x
+
+
+def _epilogue(cfg: _Cfg, logp, ent, behaviour, adv):
+    return grpo.per_token_objective(
+        logp, behaviour, adv, clip_low=cfg.clip_low, clip_high=cfg.clip_high,
+        use_is=cfg.use_is, is_ratio_cap=cfg.is_ratio_cap, entropy=ent,
+        entropy_coef=cfg.entropy_coef)
+
+
+# -- forward statistics: logp / lse / entropy, three ways -------------------
+
+
+def _stats_materialize(cfg: _Cfg, hidden, w, targets):
+    from repro.common.partitioning import shard_activation
+    logits = _softcap(
+        jnp.einsum("bsd,dv->bsv", hidden, w.astype(hidden.dtype),
+                   preferred_element_type=jnp.float32), cfg.logit_softcap)
+    logits = shard_activation(logits, "dp", None, "tp")
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    tgt = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    p = jnp.exp(logits - lse[..., None])
+    ebar = (p * logits).sum(-1)                             # E_p[logit]
+    return tgt - lse, lse, lse - ebar
+
+
+def _stats_blocked(cfg: _Cfg, hidden, w, targets):
+    B, S, d = hidden.shape
+    V = w.shape[1]
+    vb = min(cfg.vocab_block, V)
+    nb = -(-V // vb)
+    wp = jnp.pad(w, ((0, 0), (0, nb * vb - V)))
+
+    def body(carry, bi):
+        m, l, g, u = carry
+        blk = jax.lax.dynamic_slice(wp, (0, bi * vb), (d, vb))
+        logits = _softcap(
+            jnp.einsum("bsd,dv->bsv", hidden, blk.astype(hidden.dtype),
+                       preferred_element_type=jnp.float32), cfg.logit_softcap)
+        ids = bi * vb + jnp.arange(vb)
+        logits = jnp.where((ids < V)[None, None, :], logits, NEG_INF)
+        m_new = jnp.maximum(m, logits.max(-1))
+        corr = jnp.exp(m - m_new)
+        p_blk = jnp.exp(logits - m_new[..., None])
+        l = l * corr + p_blk.sum(-1)
+        u = u * corr + (p_blk * logits).sum(-1)
+        hit = targets[..., None] == ids[None, None, :]
+        g = g + jnp.where(hit, logits, 0.0).sum(-1)
+        return (m_new, l, g, u), None
+
+    z = jnp.zeros((B, S), jnp.float32)
+    (m, l, g, u), _ = jax.lax.scan(
+        body, (jnp.full((B, S), NEG_INF, jnp.float32), z, z, z),
+        jnp.arange(nb))
+    lse = m + jnp.log(l)
+    return g - lse, lse, lse - u / l
+
+
+# -- backward: dlogits recompute, three ways --------------------------------
+
+
+def _dlogits(cfg: _Cfg, logits, targets, lse, ebar, a, e):
+    p = jnp.exp(logits - lse[..., None])
+    hit = jax.nn.one_hot(targets, logits.shape[-1], dtype=jnp.float32)
+    dl = a[..., None] * (hit - p) - e[..., None] * p * (logits - ebar[..., None])
+    if cfg.logit_softcap > 0.0:
+        dl = dl * (1.0 - jnp.square(logits / cfg.logit_softcap))
+    return dl
+
+
+def _bwd_materialize(cfg: _Cfg, hidden, w, targets, lse, ebar, a, e):
+    from repro.common.partitioning import shard_activation
+    logits = _softcap(
+        jnp.einsum("bsd,dv->bsv", hidden, w.astype(hidden.dtype),
+                   preferred_element_type=jnp.float32), cfg.logit_softcap)
+    logits = shard_activation(logits, "dp", None, "tp")
+    dl = _dlogits(cfg, logits, targets, lse, ebar, a, e)
+    dh = jnp.einsum("bsv,dv->bsd", dl, w.astype(jnp.float32))
+    dw = jnp.einsum("bsd,bsv->dv", hidden.astype(jnp.float32), dl)
+    return dh.astype(hidden.dtype), dw.astype(w.dtype)
+
+
+def _bwd_blocked(cfg: _Cfg, hidden, w, targets, lse, ebar, a, e):
+    B, S, d = hidden.shape
+    V = w.shape[1]
+    vb = min(cfg.vocab_block, V)
+    nb = -(-V // vb)
+    Vp = nb * vb
+    wp = jnp.pad(w, ((0, 0), (0, Vp - V)))
+
+    def body(carry, bi):
+        dh, dw = carry
+        blk = jax.lax.dynamic_slice(wp, (0, bi * vb), (d, vb))
+        logits = _softcap(
+            jnp.einsum("bsd,dv->bsv", hidden, blk.astype(hidden.dtype),
+                       preferred_element_type=jnp.float32), cfg.logit_softcap)
+        ids = bi * vb + jnp.arange(vb)
+        valid = (ids < V)[None, None, :]
+        logits = jnp.where(valid, logits, NEG_INF)
+        p = jnp.where(valid, jnp.exp(logits - lse[..., None]), 0.0)
+        hit = (targets[..., None] == ids[None, None, :]).astype(jnp.float32)
+        dl = (a[..., None] * (hit - p)
+              - e[..., None] * p * (logits - ebar[..., None]))
+        if cfg.logit_softcap > 0.0:
+            dl = dl * (1.0 - jnp.square(logits / cfg.logit_softcap))
+        dl = jnp.where(valid, dl, 0.0)
+        dh = dh + jnp.einsum("bsv,dv->bsd", dl, blk.astype(jnp.float32))
+        dwb = jnp.einsum("bsd,bsv->dv", hidden.astype(jnp.float32), dl)
+        # each vocab block is visited exactly once -> plain write, no read-add
+        dw = jax.lax.dynamic_update_slice(dw, dwb, (0, bi * vb))
+        return (dh, dw), None
+
+    dh0 = jnp.zeros((B, S, d), jnp.float32)
+    dw0 = jnp.zeros((d, Vp), jnp.float32)
+    (dh, dw), _ = jax.lax.scan(body, (dh0, dw0), jnp.arange(nb))
+    return dh.astype(hidden.dtype), dw[:, :V].astype(w.dtype)
+
+
+# -- the custom-vjp op ------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _fused(cfg: _Cfg, hidden, w, targets, behaviour, adv):
+    out, _ = _fused_fwd(cfg, hidden, w, targets, behaviour, adv)
+    return out
+
+
+def _fused_fwd(cfg: _Cfg, hidden, w, targets, behaviour, adv):
+    B, S, _ = hidden.shape
+    if cfg.impl == "pallas":
+        outs = _k.fused_is_grpo_fwd_rows(
+            hidden.reshape(B * S, -1), w, targets.reshape(-1),
+            behaviour.reshape(-1).astype(jnp.float32),
+            adv.reshape(-1).astype(jnp.float32),
+            logit_softcap=cfg.logit_softcap, clip_low=cfg.clip_low,
+            clip_high=cfg.clip_high, use_is=cfg.use_is,
+            is_ratio_cap=cfg.is_ratio_cap, entropy_coef=cfg.entropy_coef,
+            block_rows=cfg.block_rows, block_v=cfg.block_v,
+            interpret=cfg.interpret)
+        loss_tok, ratio, logp, lse, ent = (o.reshape(B, S) for o in outs)
+    else:
+        stats = (_stats_blocked if cfg.impl == "blocked"
+                 else _stats_materialize)
+        logp, lse, ent = stats(cfg, hidden, w, targets)
+        loss_tok, ratio = _epilogue(cfg, logp, ent, behaviour, adv)
+    res = (hidden, w, targets, behaviour, adv, logp, lse, ent)
+    return (loss_tok, ratio, logp, ent), res
+
+
+def _fused_bwd(cfg: _Cfg, res, cts):
+    hidden, w, targets, behaviour, adv, logp, lse, ent = res
+    d_loss, d_ratio, d_logp_out, d_ent_out = cts
+    # Per-row cotangents of the logp / entropy channels via the SAME
+    # elementwise epilogue the forward used — clip boundaries and
+    # jnp.minimum ties therefore get jax's own subgradient convention.
+    _, epi_vjp = jax.vjp(
+        lambda lp, en, bh, ad: _epilogue(cfg, lp, en, bh, ad),
+        logp, ent, behaviour, adv)
+    dlp, den, d_beh, d_adv = epi_vjp((d_loss, d_ratio))
+    a = (dlp + d_logp_out).astype(jnp.float32)
+    e = (den + d_ent_out).astype(jnp.float32)
+    ebar = lse - ent
+    if cfg.impl == "pallas":
+        B, S, d = hidden.shape
+        dh, dw = _k.fused_is_grpo_bwd_rows(
+            hidden.reshape(B * S, d), w, targets.reshape(-1),
+            lse.reshape(-1), ebar.reshape(-1), a.reshape(-1), e.reshape(-1),
+            logit_softcap=cfg.logit_softcap, block_rows=cfg.block_rows,
+            block_v=cfg.block_v, interpret=cfg.interpret)
+        dh = dh.reshape(hidden.shape)
+    elif cfg.impl == "blocked":
+        dh, dw = _bwd_blocked(cfg, hidden, w, targets, lse, ebar, a, e)
+    else:
+        dh, dw = _bwd_materialize(cfg, hidden, w, targets, lse, ebar, a, e)
+    dt = np.zeros(targets.shape, jax.dtypes.float0)
+    return dh, dw, dt, d_beh, d_adv
+
+
+_fused.defvjp(_fused_fwd, _fused_bwd)
+
+
+def fused_is_grpo(hidden, w, targets, behaviour, adv, *,
+                  logit_softcap: float = 0.0, clip_low: float = 0.2,
+                  clip_high: float = 0.28, use_is: bool = True,
+                  is_ratio_cap: float = 10.0, entropy_coef: float = 0.0,
+                  impl: str = "pallas", vocab_block: int = 2048,
+                  block_rows: int = 256, block_v: int = 512,
+                  interpret=None):
+    """hidden (B, S, d); w (d, V); targets/behaviour/adv (B, S).
+
+    Returns ``(loss_tok, ratio, logp, entropy)`` fp32 (B, S). ``adv`` is
+    per-token (broadcast per-sequence advantages before calling).
+    Differentiable wrt hidden/w/behaviour/adv; the (B, S, V) tensor is
+    never residualized between forward and backward in any mode.
+    """
+    if impl not in ("pallas", "blocked", "materialize"):
+        raise ValueError(f"unknown fused_is_grpo impl {impl!r}")
+    interp = (jax.default_backend() == "cpu") if interpret is None \
+        else interpret
+    cfg = _Cfg(logit_softcap=float(logit_softcap), clip_low=float(clip_low),
+               clip_high=float(clip_high), use_is=bool(use_is),
+               is_ratio_cap=float(is_ratio_cap),
+               entropy_coef=float(entropy_coef), impl=impl,
+               vocab_block=int(vocab_block), block_rows=int(block_rows),
+               block_v=int(block_v), interpret=bool(interp))
+    return _fused(cfg, hidden, w, targets.astype(jnp.int32),
+                  behaviour.astype(jnp.float32), adv.astype(jnp.float32))

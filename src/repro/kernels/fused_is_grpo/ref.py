@@ -1,0 +1,40 @@
+"""Unfused jnp oracle for the fused IS+GRPO loss kernel.
+
+Materialises the full (B, S, V) log-prob tensor and runs the exact
+``grpo.per_token_objective`` math on top — the differentiable reference
+the Pallas kernel and the blocked jnp path must match (values AND
+``jax.grad``). Deliberately the memory-hungry three-pass formulation the
+kernel replaces: logits → log_softmax → gather/entropy → ratio/clip ops.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import grpo
+
+
+def _softcap(x, cap):
+    return jnp.tanh(x / cap) * cap if cap and cap > 0.0 else x
+
+
+def is_grpo_reference(hidden, w, targets, behaviour, adv, *,
+                      logit_softcap: float = 0.0,
+                      clip_low: float = 0.2, clip_high: float = 0.28,
+                      use_is: bool = True, is_ratio_cap: float = 10.0,
+                      entropy_coef: float = 0.0):
+    """hidden (B, S, d); w (d, V); targets/behaviour/adv (B, S).
+
+    Returns ``(loss_tok, ratio, logp, entropy)``, all fp32 (B, S).
+    """
+    logits = _softcap(
+        jnp.einsum("bsd,dv->bsv", hidden, w.astype(hidden.dtype),
+                   preferred_element_type=jnp.float32), logit_softcap)
+    logp_all = jax.nn.log_softmax(logits, axis=-1)
+    logp = jnp.take_along_axis(logp_all, targets[..., None], axis=-1)[..., 0]
+    entropy = -(jnp.exp(logp_all) * logp_all).sum(-1)
+    loss_tok, ratio = grpo.per_token_objective(
+        logp, behaviour, adv, clip_low=clip_low, clip_high=clip_high,
+        use_is=use_is, is_ratio_cap=is_ratio_cap, entropy=entropy,
+        entropy_coef=entropy_coef)
+    return loss_tok, ratio, logp, entropy

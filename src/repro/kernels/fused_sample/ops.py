@@ -1,0 +1,37 @@
+"""Jit'd wrapper for the fused top-k/top-p sampling kernel.
+
+Drop-in for ``sampler.sample_rows`` (same signature, same per-row key
+purity, bit-identical token stream): the rollout engine's decode scan
+calls this above the Pallas gate instead of materialising a full-vocab
+softmax + sort per token. Greedy (temperature <= 0) stays a plain XLA
+argmax — it is already a single fused reduction.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fused_sample.fused_sample import fused_sample_rows_kernel
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "temperature", "top_p", "top_k", "block_rows", "block_v", "interpret"))
+def fused_sample_rows(keys, logits, *, temperature: float = 1.0,
+                      top_p: float = 1.0, top_k: int = -1,
+                      block_rows: int = 8, block_v: int = 512,
+                      interpret=None):
+    """keys: (B, 2) uint32 raw threefry keys; logits: (B, V) fp32.
+
+    Returns ``(tokens (B,) int32, logps (B,) fp32)`` — token stream
+    bit-identical to ``sampler.sample_rows(keys, logits, ...)``.
+    """
+    interp = (jax.default_backend() == "cpu") if interpret is None \
+        else interpret
+    if temperature <= 0.0:
+        tok = jnp.argmax(logits, axis=-1)
+        return tok.astype(jnp.int32), jnp.zeros(tok.shape, jnp.float32)
+    return fused_sample_rows_kernel(
+        keys, logits, temperature=temperature, top_k=top_k, top_p=top_p,
+        block_rows=block_rows, block_v=block_v, interpret=interp)

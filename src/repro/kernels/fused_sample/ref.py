@@ -1,0 +1,20 @@
+"""XLA oracle for the fused sampling kernel.
+
+The reference IS the engine's production sampler: per-row truncated
+categorical sampling via ``sampler.prepare_logits`` (shared
+temperature/top-k/top-p masking) + ``jax.random.categorical`` on raw
+(2,) uint32 threefry keys. The Pallas kernel must reproduce its TOKEN
+stream bit-for-bit in interpret mode (the kernel regenerates the same
+threefry/Gumbel bits); the behaviour logp matches to fp32 summation
+order.
+"""
+from __future__ import annotations
+
+from repro.sampling import sampler
+
+
+def sample_rows(keys, logits, *, temperature: float = 1.0,
+                top_p: float = 1.0, top_k: int = -1):
+    """keys (B, 2) uint32; logits (B, V) fp32 -> (tok (B,), logp (B,))."""
+    return sampler.sample_rows(keys, logits, temperature=temperature,
+                               top_p=top_p, top_k=top_k)

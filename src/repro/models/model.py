@@ -87,7 +87,7 @@ def _project_media(params, cfg: ModelConfig, media, *, mode="train"):
 
 
 def _logits(params, cfg: ModelConfig, x):
-    w = (params["embed"]["tok"].T if cfg.tie_embeddings else params["lm_head"])
+    w = unembed_weight(params, cfg)
     out = x @ w.astype(x.dtype)
     out = out.astype(jnp.float32)
     if cfg.logit_softcap > 0.0:
@@ -129,6 +129,23 @@ def forward_train(params, cfg: ModelConfig, tokens, *, media=None,
     return _logits(params, cfg, x), {"router_aux": aux}
 
 
+def unembed_weight(params, cfg: ModelConfig):
+    """The (d, V) unembedding matrix (tied embedding or lm_head)."""
+    return params["embed"]["tok"].T if cfg.tie_embeddings else params["lm_head"]
+
+
+def forward_hidden(params, cfg: ModelConfig, tokens, *, media=None,
+                   seq_mask=None, use_pallas=False, remat=True):
+    """Backbone only: final-norm hidden states (B, S, d) + aux dict.
+
+    The pre-unembedding entry point for fused losses (kernels/fused_is_grpo)
+    that consume (hidden, unembed_weight) directly and never materialise
+    the (B, S, V) logits."""
+    x, _, aux = backbone(params, cfg, tokens, media=media, seq_mask=seq_mask,
+                         mode="train", use_pallas=use_pallas, remat=remat)
+    return x, {"router_aux": aux}
+
+
 def token_logprobs_from_logits(logits, targets):
     """logits: (B, S, V) fp32; targets: (B, S) — log p(targets)."""
     lse = jax.nn.logsumexp(logits, axis=-1)
@@ -145,7 +162,7 @@ def score_logprobs(params, cfg: ModelConfig, tokens, targets, *, media=None,
     Returns (logps (B, S) fp32, aux)."""
     x, _, aux = backbone(params, cfg, tokens, media=media, seq_mask=seq_mask,
                          mode="train", use_pallas=use_pallas, remat=remat)
-    w = (params["embed"]["tok"].T if cfg.tie_embeddings else params["lm_head"])
+    w = unembed_weight(params, cfg)
     if use_pallas:
         from repro.kernels.fused_logprob import ops as flp_ops
         lp = flp_ops.fused_logprob(x, w, targets, logit_softcap=cfg.logit_softcap)

@@ -36,6 +36,22 @@ def _apply_top_p(logits, p: float):
     return jnp.where(logits < thresh, NEG_INF, logits)
 
 
+def prepare_logits(logits, *, temperature: float, top_p: float = 1.0,
+                   top_k: int = -1):
+    """Temperature scaling + top-k + top-p masking over the last axis.
+
+    THE single reference semantics for truncated sampling: ``sample``,
+    ``_sample_row`` and the fused Pallas sampling kernel
+    (``kernels/fused_sample``) all match this function. temperature must
+    be > 0 (greedy never reaches the masking path). Dropped entries
+    become ``NEG_INF``; ties at either threshold are kept.
+    """
+    l = logits / temperature
+    l = _apply_top_k(l, top_k)
+    l = _apply_top_p(l, top_p)
+    return l
+
+
 def sample(key, logits, *, temperature: float = 1.0, top_p: float = 1.0,
            top_k: int = -1):
     """logits: (B, V) fp32. Returns (tokens (B,), logps (B,)) where logps are
@@ -44,9 +60,8 @@ def sample(key, logits, *, temperature: float = 1.0, top_p: float = 1.0,
     if temperature <= 0.0:
         tok = jnp.argmax(logits, axis=-1)
         return tok, jnp.zeros(tok.shape, jnp.float32)
-    l = logits / temperature
-    l = _apply_top_k(l, top_k)
-    l = _apply_top_p(l, top_p)
+    l = prepare_logits(logits, temperature=temperature, top_p=top_p,
+                       top_k=top_k)
     tok = jax.random.categorical(key, l, axis=-1)
     logp = jax.nn.log_softmax(l, axis=-1)
     lp = jnp.take_along_axis(logp, tok[:, None], axis=-1)[:, 0]
@@ -58,9 +73,8 @@ def _sample_row(key, logits, *, temperature: float, top_p: float, top_k: int):
     if temperature <= 0.0:
         tok = jnp.argmax(logits, axis=-1)
         return tok, jnp.zeros((), jnp.float32)
-    l = logits / temperature
-    l = _apply_top_k(l, top_k)
-    l = _apply_top_p(l, top_p)
+    l = prepare_logits(logits, temperature=temperature, top_p=top_p,
+                       top_k=top_k)
     tok = jax.random.categorical(key, l)
     logp = jax.nn.log_softmax(l, axis=-1)
     return tok, logp[tok]

@@ -1,0 +1,229 @@
+"""Fused IS+GRPO loss (PR 10 tentpole a): every impl must match the unfused
+XLA reference in value AND jax.grad — including clip-boundary / ratio-cap
+subgradients — while never residualizing the (B, S, V) tensor."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import grpo
+from repro.kernels.fused_is_grpo import ops as fio_ops
+from repro.kernels.fused_is_grpo.ref import is_grpo_reference
+
+IMPLS = ["materialize", "blocked", "pallas"]
+
+
+def _inputs(key=0, B=2, S=5, d=16, V=133):
+    ks = jax.random.split(jax.random.PRNGKey(key), 5)
+    hidden = jax.random.normal(ks[0], (B, S, d), jnp.float32)
+    w = jax.random.normal(ks[1], (d, V), jnp.float32) * 0.3
+    targets = jax.random.randint(ks[2], (B, S), 0, V)
+    behaviour = jax.random.normal(ks[3], (B, S)) * 0.5 - 2.0
+    adv = jax.random.normal(ks[4], (B, S))
+    return hidden, w, targets, behaviour, adv
+
+
+KW = dict(logit_softcap=5.0, clip_low=0.2, clip_high=0.28, use_is=True,
+          is_ratio_cap=10.0, entropy_coef=0.01)
+
+
+@pytest.mark.parametrize("impl", IMPLS)
+def test_forward_matches_reference(impl):
+    hidden, w, targets, behaviour, adv = _inputs()
+    ref = is_grpo_reference(hidden, w, targets, behaviour, adv, **KW)
+    out = fio_ops.fused_is_grpo(hidden, w, targets, behaviour, adv,
+                                impl=impl, vocab_block=32, block_rows=4,
+                                block_v=32, **KW)
+    for name, a, b in zip(("loss", "ratio", "logp", "entropy"), out, ref):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=3e-5,
+                                   err_msg=f"{impl}:{name}")
+
+
+@pytest.mark.parametrize("impl", IMPLS)
+@pytest.mark.parametrize("kw", [
+    KW,
+    dict(logit_softcap=0.0, clip_low=0.2, clip_high=0.28, use_is=False,
+         is_ratio_cap=10.0, entropy_coef=0.0),
+    dict(logit_softcap=0.0, clip_low=0.3, clip_high=0.3, use_is=True,
+         is_ratio_cap=1.5, entropy_coef=0.05),   # tight cap: ratios clamp
+])
+def test_grad_parity(impl, kw):
+    hidden, w, targets, behaviour, adv = _inputs(key=1)
+    ct = jax.random.normal(jax.random.PRNGKey(7), targets.shape) * 0.3
+
+    def f_fused(h, w_, beh, ad):
+        loss_tok, ratio, _, _ = fio_ops.fused_is_grpo(
+            h, w_, targets, beh, ad, impl=impl, vocab_block=32,
+            block_rows=4, block_v=32, **kw)
+        return (loss_tok * ct).sum() + 0.1 * (ratio * ct).sum()
+
+    def f_ref(h, w_, beh, ad):
+        loss_tok, ratio, _, _ = is_grpo_reference(h, w_, targets, beh, ad,
+                                                  **kw)
+        return (loss_tok * ct).sum() + 0.1 * (ratio * ct).sum()
+
+    g1 = jax.grad(f_fused, argnums=(0, 1, 2, 3))(hidden, w, behaviour, adv)
+    g2 = jax.grad(f_ref, argnums=(0, 1, 2, 3))(hidden, w, behaviour, adv)
+    for name, a, b in zip(("dh", "dw", "dbeh", "dadv"), g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=5e-5,
+                                   err_msg=f"{impl}:{name}")
+
+
+@pytest.mark.parametrize("impl", IMPLS)
+def test_grad_parity_logp_entropy_channels(impl):
+    """Gradients flowing through the logp/entropy outputs (not just
+    loss/ratio) hit the a/e accumulation path in the backward."""
+    hidden, w, targets, behaviour, adv = _inputs(key=3, V=67)
+
+    def f(h, w_, op):
+        out = op(h, w_, targets, behaviour, adv)
+        return (out[2] ** 2).sum() + 0.5 * out[3].sum()
+
+    fused = lambda h, w_, t, b, a: fio_ops.fused_is_grpo(
+        h, w_, t, b, a, impl=impl, vocab_block=16, block_rows=4,
+        block_v=16, **KW)
+    ref = lambda h, w_, t, b, a: is_grpo_reference(h, w_, t, b, a, **KW)
+    g1 = jax.grad(lambda h, w_: f(h, w_, fused), argnums=(0, 1))(hidden, w)
+    g2 = jax.grad(lambda h, w_: f(h, w_, ref), argnums=(0, 1))(hidden, w)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=5e-5)
+
+
+@pytest.mark.parametrize("impl", IMPLS)
+def test_clip_boundary_subgradients(impl):
+    """behaviour == logp (ratio exactly 1: the min() tie where both clip
+    branches coincide) plus ratios pinned just inside/outside the ratio cap
+    and the 1+clip_high boundary — fused subgradients must equal jax.grad
+    of the reference on every definite side (the epilogue-vjp construction;
+    exactly AT the cap an ulp of logp flips the clamp side, so the sides
+    are the testable contract)."""
+    hidden, w, targets, _, adv = _inputs(key=5, V=41)
+    logp = is_grpo_reference(hidden, w, targets, jnp.zeros_like(adv), adv,
+                             **KW)[2]
+    log_cap = float(np.log(KW["is_ratio_cap"]))
+    cases = {
+        "tie_at_one": logp,                       # ratio == 1 exactly
+        "below_cap": logp - log_cap + 0.05,       # active (uncapped) ratio
+        "above_cap": logp - log_cap - 0.05,       # cap clamps: zero d/dlogp
+        "below_clip_high": logp - np.log(1.28) + 0.05,
+        "above_clip_high": logp - np.log(1.28) - 0.05,
+    }
+    for name, behaviour in cases.items():
+        def f(h, op):
+            lt, r, _, _ = op(h, w, targets, behaviour, adv)
+            return lt.sum() + r.sum()
+
+        g1 = jax.grad(lambda h: f(h, lambda *a: fio_ops.fused_is_grpo(
+            *a, impl=impl, vocab_block=16, block_rows=4, block_v=16,
+            **KW)))(hidden)
+        g2 = jax.grad(lambda h: f(h, lambda *a: is_grpo_reference(
+            *a, **KW)))(hidden)
+        np.testing.assert_allclose(np.asarray(g1), np.asarray(g2),
+                                   atol=5e-5, err_msg=f"{impl}:{name}")
+
+
+@pytest.mark.parametrize("impl", IMPLS)
+def test_finite_difference(impl):
+    hidden, w, targets, behaviour, adv = _inputs(key=2, B=1, S=3, d=8, V=33)
+
+    def f(h):
+        lt, _, _, _ = fio_ops.fused_is_grpo(
+            h, w, targets, behaviour, adv, impl=impl, vocab_block=16,
+            block_rows=4, block_v=16, **KW)
+        return lt.sum()
+
+    g = np.asarray(jax.grad(f)(hidden))
+    eps = 1e-3
+    rng = np.random.RandomState(0)
+    for _ in range(6):
+        i = tuple(rng.randint(s) for s in hidden.shape)
+        dv = np.zeros(hidden.shape, np.float32)
+        dv[i] = eps
+        fd = (f(hidden + dv) - f(hidden - dv)) / (2 * eps)
+        np.testing.assert_allclose(g[i], float(fd), atol=2e-3,
+                                   err_msg=str(i))
+
+
+@pytest.mark.parametrize("impl", ["blocked", "pallas"])
+def test_no_quadratic_residuals(impl):
+    """The custom VJP residualizes O(R·d + d·V) values — never the (R, V)
+    logits (the whole point of the fused loss)."""
+    B, S, d, V = 2, 64, 16, 512
+    hidden, w, targets, behaviour, adv = _inputs(key=4, B=B, S=S, d=d, V=V)
+    out, vjp = jax.vjp(
+        lambda h, w_: fio_ops.fused_is_grpo(
+            h, w_, targets, behaviour, adv, impl=impl, vocab_block=64,
+            block_rows=16, block_v=64, **KW)[0].sum(), hidden, w)
+    for leaf in jax.tree.leaves(vjp):
+        if hasattr(leaf, "size"):
+            assert leaf.size <= d * V, leaf.shape   # R*V = 65536 >> d*V
+    dh, dw = vjp(jnp.ones_like(out))
+    assert dh.shape == hidden.shape and dw.shape == w.shape
+
+
+# -- satellite 1: entropy_coef on the big-vocab path ------------------------
+
+
+def _big_vocab_cfg():
+    from repro.configs import get_config
+    cfg = get_config("tiny")
+    from repro.core.copris import FUSED_VOCAB_THRESHOLD
+    return dataclasses.replace(cfg, vocab_size=FUSED_VOCAB_THRESHOLD)
+
+
+def test_entropy_coef_big_vocab_unfused_raises():
+    from repro.common.config import TrainConfig
+    from repro.core.copris import make_loss_fn
+    cfg = _big_vocab_cfg()
+    with pytest.raises(ValueError, match="entropy_coef"):
+        make_loss_fn(cfg, TrainConfig(entropy_coef=0.01, fused_loss=False))
+    # fused path supports the bonus; legacy path is fine without it
+    make_loss_fn(cfg, TrainConfig(entropy_coef=0.01, fused_loss=True))
+    make_loss_fn(cfg, TrainConfig(entropy_coef=0.0, fused_loss=False))
+
+
+def test_make_loss_fn_fused_matches_legacy():
+    """Same loss value + grads from the fused big-vocab path and the legacy
+    score_logprobs path (entropy_coef=0 so both are defined), and the fused
+    path now reports the entropy metric the legacy path cannot."""
+    from repro.common.config import TrainConfig
+    from repro.core.copris import make_loss_fn
+    from repro.models import model as M
+    cfg = _big_vocab_cfg()
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    B, S = 2, 8
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    mb = {
+        "tokens": jax.random.randint(ks[0], (B, S), 0, cfg.vocab_size),
+        "loss_mask": jnp.ones((B, S), jnp.float32),
+        "behaviour_logp": jax.random.normal(ks[1], (B, S)) * 0.3 - 4.0,
+        "advantages": jax.random.normal(ks[2], (B,)),
+    }
+    tc = dict(lr=1e-3, entropy_coef=0.0)
+    f_fused = make_loss_fn(cfg, TrainConfig(fused_loss=True, **tc))
+    f_leg = make_loss_fn(cfg, TrainConfig(fused_loss=False, **tc))
+    (l1, m1), g1 = jax.value_and_grad(f_fused, has_aux=True)(params, mb)
+    (l2, m2), g2 = jax.value_and_grad(f_leg, has_aux=True)(params, mb)
+    np.testing.assert_allclose(float(l1), float(l2), atol=2e-5)
+    np.testing.assert_allclose(float(m1["pg_loss"]), float(m2["pg_loss"]),
+                               atol=2e-5)
+    assert "entropy" in m1 and "entropy" not in m2
+    flat1, flat2 = jax.tree.leaves(g1), jax.tree.leaves(g2)
+    for a, b in zip(flat1, flat2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=5e-5)
+
+
+def test_entropy_bonus_moves_loss():
+    """entropy_coef > 0 actually changes the fused loss (the satellite-1
+    bug was the bonus being silently dropped above the vocab threshold)."""
+    hidden, w, targets, behaviour, adv = _inputs(key=6)
+    base = dict(KW, entropy_coef=0.0)
+    bonus = dict(KW, entropy_coef=0.5)
+    l0 = fio_ops.fused_is_grpo(hidden, w, targets, behaviour, adv,
+                               impl="blocked", **base)[0]
+    l1, _, _, ent = fio_ops.fused_is_grpo(hidden, w, targets, behaviour, adv,
+                                          impl="blocked", **bonus)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l0 - 0.5 * ent),
+                               atol=1e-5)
